@@ -1,0 +1,34 @@
+"""Paper Fig 7: effective fan-in/out under the two compression schemes."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (CoreBudget, caps_from_budget, compression_report,
+                        greedy_partition, synthetic_flywire_cached)
+from .common import BENCH_N, BENCH_SYN, row
+
+
+def run(full: bool = False):
+    n, syn = (139_255, 15_000_000) if full else (BENCH_N, BENCH_SYN)
+    c = synthetic_flywire_cached(n=n, seed=0, target_synapses=syn)
+    caps = caps_from_budget(CoreBudget.loihi2(), "sar")
+    p = greedy_partition(c, caps, scheme="sar")
+    rep = compression_report(c, p.part_of_neuron, bits=9)
+    rows = []
+    rows.append(row("fig7.raw_max_fan_in", rep["raw_max_fan_in"],
+                    "paper: 10,356"))
+    rows.append(row("fig7.sar_max_eff_fan_in", rep["sar_max_eff_fan_in"],
+                    "paper: 165 (<=512 theoretical)"))
+    rows.append(row("fig7.sar_reduction",
+                    f"{rep['raw_max_fan_in']/max(1,rep['sar_max_eff_fan_in']):.1f}x",
+                    "paper: ~63x on the outlier"))
+    rows.append(row("fig7.sar_memory_ratio",
+                    f"{rep['sar_memory_ratio']:.3f}",
+                    "unique-(w,target) entries / synapses"))
+    rows.append(row("fig7.ssd_max_eff_fan_out", rep["ssd_max_eff_fan_out"],
+                    "distinct target cores per source"))
+    rows.append(row("fig7.ssd_message_ratio",
+                    f"{rep['ssd_message_ratio']:.3f}",
+                    "messages / synapses (aggregation win)"))
+    return rows

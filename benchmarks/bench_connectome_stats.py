@@ -1,0 +1,34 @@
+"""Paper Figs 2-3: weight + fan-in/out distribution statistics of the
+synthetic FlyWire-statistics connectome."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import synthetic_flywire_cached
+from .common import BENCH_N, BENCH_SYN, row
+
+
+def run(full: bool = False):
+    n, syn = (139_255, 15_000_000) if full else (BENCH_N, BENCH_SYN)
+    c = synthetic_flywire_cached(n=n, seed=0, target_synapses=syn)
+    s = c.stats()
+    rows = []
+    rows.append(row("connectome.n_neurons", s["n_neurons"]))
+    rows.append(row("connectome.n_synapses", s["n_synapses"]))
+    rows.append(row("connectome.max_fan_in", s["max_fan_in"],
+                    "paper: 10,356 at full scale"))
+    rows.append(row("connectome.max_fan_out", s["max_fan_out"],
+                    "paper: 9,783"))
+    rows.append(row("connectome.frac_w_pm1", f"{s['frac_w_pm1']:.3f}",
+                    "paper Fig2: large mode at +-1"))
+    rows.append(row("connectome.w_range", f"{s['w_min']}..{s['w_max']}",
+                    "paper: -2405..1897"))
+    rows.append(row("connectome.frac_inhibitory",
+                    f"{s['frac_inhibitory']:.3f}", "Dale's law per source"))
+    fi = c.fan_in
+    rows.append(row("connectome.fan_in_p50_p99_max",
+                    f"{int(np.percentile(fi,50))}/"
+                    f"{int(np.percentile(fi,99))}/{fi.max()}",
+                    "heavy tail (Fig 3)"))
+    return rows

@@ -1,0 +1,52 @@
+"""Paper Figs 8-10 + §3.2.4: greedy capacity partitioning vs even split,
+per-core neuron/fan/memory distributions, and the Loihi-2 chip estimate
+(paper: SAR -> 12 chips / 1440 cores, SSD -> 20 chips, 120 cores/chip)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (CoreBudget, caps_from_budget, even_partition,
+                        greedy_partition, partition_report,
+                        synthetic_flywire_cached)
+from .common import BENCH_N, BENCH_SYN, row
+
+
+def run(full: bool = False):
+    n, syn = (139_255, 15_000_000) if full else (BENCH_N, BENCH_SYN)
+    c = synthetic_flywire_cached(n=n, seed=0, target_synapses=syn)
+    budget = CoreBudget.loihi2()
+    rows = []
+    for scheme in ("sar", "ssd"):
+        caps = caps_from_budget(budget, scheme)
+        p = greedy_partition(c, caps, scheme=scheme)
+        rep = partition_report(c, p, budget)
+        chips = int(np.ceil(p.n_parts / 120))
+        rows.append(row(f"fig8.{scheme}.n_cores", p.n_parts,
+                        "paper: SAR 1440, SSD 2400 at full scale"))
+        rows.append(row(f"fig8.{scheme}.n_chips", chips,
+                        "paper: SAR 12, SSD 20"))
+        rows.append(row(f"fig8.{scheme}.neurons_per_core_p5_p50_p95",
+                        f"{int(np.percentile(rep['neurons'],5))}/"
+                        f"{int(np.percentile(rep['neurons'],50))}/"
+                        f"{int(np.percentile(rep['neurons'],95))}",
+                        "uneven by design (Fig 8)"))
+        rows.append(row(f"fig10.{scheme}.mem_util_mean",
+                        f"{rep['mem_util'].mean():.3f}",
+                        "paper: SAR 56.4%, SSD 80.0%"))
+        rows.append(row(f"fig10.{scheme}.mem_util_max",
+                        f"{rep['mem_util'].max():.3f}", "must be <= 1"))
+    # even-split baseline (what the paper argues against): same number of
+    # cores, but the outlier cores overshoot the balanced max utilization
+    caps = caps_from_budget(budget, "sar")
+    g = greedy_partition(c, caps, scheme="sar")
+    e = even_partition(c, g.n_parts)
+    rep_g = partition_report(c, g, budget)
+    rep_e = partition_report(c, e, budget)
+    rows.append(row("fig8.even_split.max_util_ratio",
+                    f"{rep_e['mem_util'].max()/rep_g['mem_util'].max():.2f}",
+                    "even-split hottest core vs greedy hottest core"))
+    rows.append(row("fig8.even_split.frac_cores_over_budget",
+                    f"{float((rep_e['mem_util'] > 1.0).mean()):.3f}",
+                    "cores exceeding the 128KB budget under even split"))
+    return rows

@@ -1,0 +1,28 @@
+"""Shared benchmark utilities."""
+
+import time
+
+import numpy as np
+
+# benchmark-scale synthetic connectome (full-scale 139k runs via
+# --full; the shapes of all paper claims are scale-free)
+BENCH_N = 20_000
+BENCH_SYN = 600_000
+FULL_N = 139_255
+FULL_SYN = 15_000_000
+
+
+def timeit(fn, *args, warmup=1, iters=3):
+    for _ in range(warmup):
+        fn(*args)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(*args)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def row(name, value, derived=""):
+    print(f"{name},{value},{derived}")
+    return (name, value, derived)

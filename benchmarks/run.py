@@ -1,0 +1,49 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+
+Prints ``name,value,derived`` CSV rows.  --full runs at the paper's
+139,255-neuron scale (slower; cached after first run).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+MODULES = [
+    "bench_connectome_stats",   # Figs 2-3
+    "bench_compression",        # Fig 7
+    "bench_partition",          # Figs 8-10, chip counts
+    "bench_parity",             # Figs 6/12/13/14/15
+    "bench_activity_scaling",   # Table 1, Figs 16-17
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper scale (139k neurons)")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    import importlib
+    print("name,value,derived")
+    t0 = time.time()
+    for name in MODULES:
+        if args.only and args.only not in name:
+            continue
+        mod = importlib.import_module(f"benchmarks.{name}")
+        t = time.time()
+        try:
+            mod.run(full=args.full)
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}.ERROR,{type(e).__name__},{e}", file=sys.stderr)
+            raise
+        print(f"# {name} done in {time.time()-t:.1f}s", file=sys.stderr)
+    print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

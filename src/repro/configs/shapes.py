@@ -1,0 +1,97 @@
+"""Assigned input-shape cells and per-(arch x cell) input specs.
+
+Four cells per LM architecture:
+  train_4k     seq 4,096   global_batch 256   (training step)
+  prefill_32k  seq 32,768  global_batch 32    (inference prefill)
+  decode_32k   one token, 32,768-entry KV     global_batch 128
+  long_500k    one token, 524,288-entry KV    global_batch 1
+               (sub-quadratic archs only)
+
+Family adjustments (documented in DESIGN.md):
+  * whisper-medium: encoder fixed at 1500 frames, decoder at its
+    architectural max 448; decode cells use that max; long_500k skipped.
+  * llava-next: n_patches stub embeddings occupy the head of the sequence.
+  * pure full-attention archs skip long_500k.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelConfig, init_cache
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+def cell_supported(cfg: ModelConfig, cell: str) -> tuple[bool, str]:
+    if cell == "long_500k":
+        if cfg.is_encdec:
+            return False, "whisper decoder max context is 448"
+        if not cfg.subquadratic:
+            return False, "pure full-attention arch; 500k decode skipped"
+    return True, ""
+
+
+def _tok(b, s):
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, cell: str, smoke_scale: bool = False):
+    """ShapeDtypeStruct stand-ins for one step of the given cell.
+
+    Returns dict with keys depending on kind:
+      train:   batch={tokens, labels, (patches|frames)}
+      prefill: batch={tokens, (patches|frames)}
+      decode:  tokens [B], pos scalar   (cache specs built separately via
+               cache_specs()).
+    """
+    spec = SHAPES[cell]
+    B, S = spec["batch"], spec["seq"]
+    if smoke_scale:
+        B, S = max(2, B // 128), max(32, S // 512)
+    kind = spec["kind"]
+
+    if cfg.is_encdec:
+        # whisper: clamp to (enc 1500 frames, dec 448 tokens)
+        Sd = cfg.dec_max
+        frames = jax.ShapeDtypeStruct((B, cfg.enc_seq, cfg.d_model),
+                                      jnp.float32)
+        if kind == "train":
+            return {"batch": {"frames": frames, "tokens": _tok(B, Sd),
+                              "labels": _tok(B, Sd)}}
+        if kind == "prefill":
+            return {"batch": {"frames": frames, "tokens": _tok(B, Sd)}}
+        return {"tokens": jax.ShapeDtypeStruct((B,), jnp.int32),
+                "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    if kind in ("train", "prefill"):
+        batch = {}
+        S_tok = S
+        if cfg.n_patches:
+            S_tok = S - cfg.n_patches
+            batch["patches"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_patches, cfg.d_model), jnp.float32)
+        batch["tokens"] = _tok(B, S_tok)
+        if kind == "train":
+            batch["labels"] = _tok(B, S_tok)
+        return {"batch": batch}
+    return {"tokens": jax.ShapeDtypeStruct((B,), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def cache_specs(cfg: ModelConfig, cell: str, dtype=jnp.float32,
+                smoke_scale: bool = False):
+    """Abstract decode-cache pytree for a decode cell."""
+    spec = SHAPES[cell]
+    B, S = spec["batch"], spec["seq"]
+    if smoke_scale:
+        B, S = max(2, B // 128), max(32, S // 512)
+    return jax.eval_shape(lambda: init_cache(cfg, B, S, dtype))

@@ -1,0 +1,17 @@
+"""Core library: the paper's contribution (connectome -> distributed
+event-driven simulation with compression-aware partitioning)."""
+
+from .connectome import (Connectome, from_edges, load_flywire_parquet,
+                         synthetic_flywire, synthetic_flywire_cached)
+from .neuron import (FLYWIRE_LIF, FLYWIRE_LIF_1MS, LIFParams, LIFState,
+                     init_state, lif_step, lif_step_fx)
+from .compress import (BinnedFormat, CoreBudget, EllFormat, build_binned,
+                       build_ell, compression_report, effective_fan_in_sar,
+                       effective_fan_out_ssd, quantize_weights)
+from .partition import (PartitionCaps, Partitioning, caps_from_budget,
+                        even_partition, greedy_partition, partition_report)
+from .engine import (SimConfig, SimResult, SynapseData, build_synapses,
+                     simulate, spike_rates_hz)
+from .validate import ParityStats, mean_rates_over_trials, parity
+
+__all__ = [k for k in dir() if not k.startswith("_")]

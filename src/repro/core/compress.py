@@ -1,0 +1,263 @@
+"""Communication/memory compression schemes (paper §3.2.3).
+
+Loihi 2 routes spikes through per-core *axon indexes*.  The paper exploits
+this indirection two ways:
+
+* **Shared synaptic delivery (SSD)** — one axon index per unique incoming
+  source fans out to all of its local targets.  Spike volume: one message per
+  (source, target-core) pair.  Memory: every synapse is still stored, so
+  outlier fan-ins must be capped (paper: 4096, via sampling + weight rescale).
+
+* **Shared axon routing (SAR)** — weights are quantized to 9 bits (capped to
+  [-256, 255]) and synaptic memory is deduplicated per (target, unique
+  weight): the axon index *is* a (target, weight) delivery, shared by every
+  source with that effect.  Effective fan-in <= #unique weights (theoretical
+  512, measured 165 vs raw 10,356).  Spike volume: full fan-out messages.
+
+On TPU (see DESIGN.md §2) SAR becomes the **bin-compressed format**: per
+target, <=B unique weights plus a flat synapse->bin membership map; synaptic
+delivery = per-bin active-source histogram (segment_sum) followed by a tiny
+dense dot with the bin weights.  SSD becomes the ELL row-capped format used
+by the gather engines and the Pallas kernel.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .connectome import Connectome
+
+WEIGHT_BITS = 9  # paper: 9-bit signed weights
+W_CAP_LO = -(1 << (WEIGHT_BITS - 1))      # -256
+W_CAP_HI = (1 << (WEIGHT_BITS - 1)) - 1   # 255
+
+
+def quantize_weights(w: np.ndarray, bits: int = WEIGHT_BITS) -> np.ndarray:
+    """Cap integer weights to the signed `bits`-bit range (paper §3.2.3)."""
+    lo, hi = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+    return np.clip(w, lo, hi).astype(np.int32)
+
+
+# --------------------------------------------------------------------------
+# Effective fan statistics (paper Fig. 7)
+# --------------------------------------------------------------------------
+
+def effective_fan_in_sar(c: Connectome, bits: int = WEIGHT_BITS) -> np.ndarray:
+    """Per-target number of unique quantized weights = SAR effective fan-in."""
+    wq = quantize_weights(c.in_weights, bits)
+    n = c.n
+    eff = np.zeros(n, dtype=np.int64)
+    # unique count per CSR row, vectorized: sort within rows then count steps
+    row = np.repeat(np.arange(n), c.fan_in)
+    order = np.lexsort((wq, row))
+    row_s, w_s = row[order], wq[order]
+    new_row = np.empty(len(row_s), dtype=bool)
+    new_row[0:1] = True
+    np.not_equal(row_s[1:], row_s[:-1], out=new_row[1:])
+    new_val = np.empty(len(row_s), dtype=bool)
+    new_val[0:1] = True
+    np.not_equal(w_s[1:], w_s[:-1], out=new_val[1:])
+    uniq = np.logical_or(new_row, new_val)
+    np.add.at(eff, row_s, uniq.astype(np.int64))
+    return eff
+
+
+def effective_fan_out_ssd(c: Connectome, part_of_neuron: np.ndarray) -> np.ndarray:
+    """Per-source number of distinct target partitions = SSD effective fan-out."""
+    n = c.n
+    src = np.repeat(np.arange(n), c.fan_out)
+    tgt_part = part_of_neuron[c.out_indices]
+    key = src * (part_of_neuron.max() + 2) + tgt_part
+    uniq_keys = np.unique(key)
+    eff = np.bincount((uniq_keys // (part_of_neuron.max() + 2)).astype(np.int64),
+                      minlength=n)
+    return eff
+
+
+def compression_report(c: Connectome, part_of_neuron: np.ndarray | None = None,
+                       bits: int = WEIGHT_BITS) -> dict:
+    """Fig-7 style summary of both schemes."""
+    eff_in = effective_fan_in_sar(c, bits)
+    rep = {
+        "raw_max_fan_in": int(c.fan_in.max()),
+        "raw_max_fan_out": int(c.fan_out.max()),
+        "sar_max_eff_fan_in": int(eff_in.max()),
+        "sar_mean_eff_fan_in": float(eff_in.mean()),
+        "sar_theoretical_max": 1 << bits,
+        "sar_memory_ratio": float(eff_in.sum()) / max(1, c.nnz),
+    }
+    if part_of_neuron is not None:
+        eff_out = effective_fan_out_ssd(c, part_of_neuron)
+        rep.update({
+            "ssd_max_eff_fan_out": int(eff_out.max()),
+            "ssd_mean_eff_fan_out": float(eff_out.mean()),
+            "ssd_message_ratio": float(eff_out.sum()) / max(1, c.nnz),
+        })
+    return rep
+
+
+# --------------------------------------------------------------------------
+# SSD: ELL row-capped target-major format (gather engines / Pallas kernel)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EllFormat:
+    """Target-major padded ELL: idx/weight [n, width]; pad slots idx=n, w=0.
+
+    ``scale`` carries the paper's fan-in-cap weight rescale: when a target's
+    fan-in exceeds the cap we keep a uniform sample of `width` synapses and
+    scale their weights by fan_in/width so the expected drive is preserved
+    (paper §3.2.4: "limit the fan-in ... with a combination of sampling and
+    weight rescaling").
+    """
+
+    idx: np.ndarray        # [n, width] int32, pad = n
+    weight: np.ndarray     # [n, width] float32 (already rescaled; in weight units)
+    width: int
+    n_capped: int
+
+
+def build_ell(c: Connectome, width_cap: int = 4096, quantize_bits: int | None = None,
+              lane_multiple: int = 8, seed: int = 0) -> EllFormat:
+    rng = np.random.default_rng(seed)
+    w = c.in_weights
+    if quantize_bits is not None:
+        w = quantize_weights(w, quantize_bits)
+    fan_in = c.fan_in
+    width = int(min(width_cap, fan_in.max() if len(fan_in) else 1))
+    width = max(lane_multiple, ((width + lane_multiple - 1) // lane_multiple)
+                * lane_multiple)
+    n = c.n
+    idx = np.full((n, width), n, dtype=np.int32)
+    wgt = np.zeros((n, width), dtype=np.float32)
+    n_capped = 0
+    starts = c.in_indptr[:-1]
+    for t in range(n):
+        f = int(fan_in[t])
+        s = int(starts[t])
+        if f <= width:
+            idx[t, :f] = c.in_indices[s:s + f]
+            wgt[t, :f] = w[s:s + f]
+        else:
+            n_capped += 1
+            sel = rng.choice(f, width, replace=False)
+            idx[t, :] = c.in_indices[s + sel]
+            wgt[t, :] = w[s + sel] * (f / width)
+    return EllFormat(idx=idx, weight=wgt, width=width, n_capped=n_capped)
+
+
+# --------------------------------------------------------------------------
+# SAR: bin-compressed format
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BinnedFormat:
+    """SAR bin-compressed synaptic state.
+
+    Per synapse (flat, target-major order): ``src`` [nnz] and ``bin_id`` [nnz]
+    (global id = target * n_bins + local bin).  Per target: ``bin_weight``
+    [n, n_bins] int32 (0 in pad bins).  Delivery:
+
+        counts[t, b] = sum over synapses in bin (t,b) of spike[src]
+        g_units[t]   = sum_b bin_weight[t, b] * counts[t, b]
+
+    Memory: nnz int32 (membership) + n*n_bins weights — vs ELL's
+    2*nnz-padded.  ``n_bins`` == max effective fan-in (paper: 165 at 9 bits).
+    """
+
+    src: np.ndarray         # [nnz] int32
+    bin_id: np.ndarray      # [nnz] int32 global bin id
+    bin_weight: np.ndarray  # [n, n_bins] int32
+    n_bins: int
+
+    @property
+    def nnz(self) -> int:
+        return int(self.src.shape[0])
+
+
+def build_binned(c: Connectome, bits: int = WEIGHT_BITS,
+                 lane_multiple: int = 8) -> BinnedFormat:
+    wq = quantize_weights(c.in_weights, bits)
+    n = c.n
+    row = np.repeat(np.arange(n), c.fan_in)
+    order = np.lexsort((wq, row))
+    row_s, w_s, src_s = row[order], wq[order], c.in_indices[order]
+    new_row = np.empty(len(row_s), dtype=bool)
+    new_row[0:1] = True
+    np.not_equal(row_s[1:], row_s[:-1], out=new_row[1:])
+    new_val = np.empty(len(row_s), dtype=bool)
+    new_val[0:1] = True
+    np.not_equal(w_s[1:], w_s[:-1], out=new_val[1:])
+    new_bin = np.logical_or(new_row, new_val)
+    # local bin index within each target row
+    bin_seq = np.cumsum(new_bin) - 1                       # global running bin
+    row_first_bin = np.zeros(n, dtype=np.int64)
+    first_pos = np.flatnonzero(new_row)
+    row_first_bin[row_s[first_pos]] = bin_seq[first_pos]
+    local_bin = bin_seq - row_first_bin[row_s]
+    n_bins = int(local_bin.max()) + 1 if len(local_bin) else 1
+    n_bins = max(lane_multiple,
+                 ((n_bins + lane_multiple - 1) // lane_multiple) * lane_multiple)
+    bin_weight = np.zeros((n, n_bins), dtype=np.int32)
+    bin_weight[row_s[new_bin], local_bin[new_bin]] = w_s[new_bin]
+    return BinnedFormat(
+        src=src_s.astype(np.int32),
+        bin_id=(row_s * n_bins + local_bin).astype(np.int32),
+        bin_weight=bin_weight,
+        n_bins=n_bins,
+    )
+
+
+# --------------------------------------------------------------------------
+# Loihi-2 / TPU memory models (paper Figs 8-10 reproduction)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CoreBudget:
+    """Per-core capacity model used by the greedy partitioner.
+
+    Loihi preset reproduces the paper's binding constraints: 128 KB synaptic
+    memory, a max axon-program size (the constraint that left SAR cores
+    underutilized), and a spike-buffer reserve (the SSD adjustment).
+    TPU preset models a VMEM-resident partition working set.
+    """
+
+    syn_mem_bytes: int
+    bytes_per_syn: int = 4       # 9b weight + delay + dendrite idx, padded
+    bytes_per_axon: int = 4
+    max_axon_entries: int = 32_768   # axon-program size limit (sender side)
+    spike_buffer_reserve: float = 0.20  # fraction of syn mem kept free (SSD)
+    max_neurons: int = 1024
+
+    @staticmethod
+    def loihi2() -> "CoreBudget":
+        return CoreBudget(syn_mem_bytes=128 * 1024)
+
+    @staticmethod
+    def tpu_vmem(vmem_bytes: int = 16 * 2**20, frac: float = 0.5) -> "CoreBudget":
+        return CoreBudget(syn_mem_bytes=int(vmem_bytes * frac),
+                          max_axon_entries=1 << 30,  # no axon-program analogue
+                          spike_buffer_reserve=0.0,
+                          max_neurons=1 << 20)
+
+
+def core_memory_ssd(fan_in_capped: np.ndarray, eff_fan_out: np.ndarray,
+                    budget: CoreBudget) -> dict:
+    """Bytes used on one core holding targets with `fan_in_capped` and
+    sources with `eff_fan_out` (SSD: one axon entry per target core)."""
+    syn = int(fan_in_capped.sum()) * budget.bytes_per_syn
+    axon = int(eff_fan_out.sum()) * budget.bytes_per_axon
+    return {"syn_bytes": syn, "axon_entries": int(eff_fan_out.sum()),
+            "total_bytes": syn + axon}
+
+
+def core_memory_sar(eff_fan_in: np.ndarray, fan_out: np.ndarray,
+                    budget: CoreBudget) -> dict:
+    """SAR: synaptic memory stores unique (target, weight) entries; the
+    sender-side axon program stores one entry per synapse (full fan-out)."""
+    syn = int(eff_fan_in.sum()) * budget.bytes_per_syn
+    axon_entries = int(fan_out.sum())
+    return {"syn_bytes": syn, "axon_entries": axon_entries,
+            "total_bytes": syn + axon_entries * budget.bytes_per_axon}

@@ -1,0 +1,206 @@
+"""Two-state current-based LIF neuron dynamics (paper Eq. 1).
+
+Float path (Brian2/STACS oracle) and int32 fixed-point path (the Loihi 2
+microcode analogue).  Both are pure-jnp and vectorized over neurons; the
+Pallas kernel in :mod:`repro.kernels.lif` fuses the same math and is tested
+against these functions.
+
+Model (forward Euler, dt):
+    dv/dt = (v0 - v + g) / tau_m        (unless refractory)
+    dg/dt = -g / tau_g                  (unless refractory)
+    v > v_th  ->  v = v_r, g = 0, refractory for tau_ref
+
+Synaptic inputs are integer weights scaled by ``w_scale`` (0.275 mV) and added
+to ``g``.  Poisson inputs (sugar experiment) either add to ``g``
+(Loihi approximation) or force ``v`` above threshold (Brian2 semantics) —
+the paper's Fig 13 ablation toggles exactly this.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+FX_FRAC_BITS = 12  # Q19.12 fixed point, state in units of w_scale
+
+
+@dataclasses.dataclass(frozen=True)
+class LIFParams:
+    tau_m: float = 20.0      # ms
+    tau_g: float = 5.0       # ms
+    tau_ref: float = 2.2     # ms
+    v0: float = 0.0          # mV (resting)
+    v_r: float = 0.0         # mV (reset)
+    v_th: float = 7.0        # mV (threshold)
+    w_scale: float = 0.275   # mV per weight quantum
+    dt: float = 0.1          # ms
+    delay: float = 1.8       # ms (uniform synaptic delay)
+
+    @property
+    def ref_steps(self) -> int:
+        return max(1, round(self.tau_ref / self.dt))
+
+    @property
+    def delay_steps(self) -> int:
+        return max(1, round(self.delay / self.dt))
+
+    # ---- float euler coefficients ----
+    @property
+    def alpha_m(self) -> float:
+        return self.dt / self.tau_m
+
+    @property
+    def decay_g(self) -> float:
+        return 1.0 - self.dt / self.tau_g
+
+    # ---- fixed point coefficients (state unit = w_scale, frac = 2**12) ----
+    # Small coefficients (alpha = dt/tau) quantized at Q12 carry a ~2%
+    # relative error (e.g. round(0.005*4096)=20 vs 20.48) that biases the
+    # membrane trajectory.  We store them at 16 fractional bits and apply
+    # them as ((x >> 2) * c16) >> 14 so the int32 product never overflows
+    # — the same narrow-multiplier discipline Loihi microcode uses.
+    @property
+    def fx_one(self) -> int:
+        return 1 << FX_FRAC_BITS
+
+    @property
+    def fx_alpha_m16(self) -> int:
+        return round(self.alpha_m * (1 << 16))
+
+    @property
+    def fx_gdecay16(self) -> int:
+        """(1 - decay_g) at 16 bits: decay applied as g -= g*(dt/tau_g)."""
+        return round((self.dt / self.tau_g) * (1 << 16))
+
+    @property
+    def fx_v_th(self) -> int:
+        return round(self.v_th / self.w_scale * self.fx_one)
+
+    @property
+    def fx_v_r(self) -> int:
+        return round(self.v_r / self.w_scale * self.fx_one)
+
+    @property
+    def fx_v0(self) -> int:
+        return round(self.v0 / self.w_scale * self.fx_one)
+
+
+# paper defaults: dt=0.1ms (and a faster dt=1ms variant with tau_ref/delay
+# rounded to 2 steps, handled automatically by ref_steps/delay_steps).
+FLYWIRE_LIF = LIFParams()
+FLYWIRE_LIF_1MS = LIFParams(dt=1.0, tau_ref=2.0, delay=2.0)
+
+
+class LIFState(NamedTuple):
+    v: jax.Array       # [n] float32 mV (or int32 fx)
+    g: jax.Array       # [n] float32 mV (or int32 fx)
+    refrac: jax.Array  # [n] int32 steps remaining
+
+
+def init_state(n: int, params: LIFParams, fixed_point: bool = False) -> LIFState:
+    if fixed_point:
+        return LIFState(
+            v=jnp.full((n,), params.fx_v0, jnp.int32),
+            g=jnp.zeros((n,), jnp.int32),
+            refrac=jnp.zeros((n,), jnp.int32),
+        )
+    return LIFState(
+        v=jnp.full((n,), params.v0, jnp.float32),
+        g=jnp.zeros((n,), jnp.float32),
+        refrac=jnp.zeros((n,), jnp.int32),
+    )
+
+
+def lif_step(
+    state: LIFState,
+    g_in: jax.Array,
+    params: LIFParams,
+    v_in: jax.Array | None = None,
+    force_spike: jax.Array | None = None,
+) -> tuple[LIFState, jax.Array]:
+    """One forward-Euler step, float path.
+
+    Args:
+      g_in: [n] synaptic drive in mV (integer weights * w_scale, delayed),
+        added to g at step start.
+      v_in: optional [n] direct membrane drive in mV (Brian2-style Poisson).
+      force_spike: optional [n] bool — probabilistic background spikes
+        (scaling study): neuron emits a spike this step regardless of v.
+
+    Returns: (new_state, spikes[bool n])
+    """
+    p = params
+    active = state.refrac <= 0
+    g = jnp.where(active, state.g + g_in, state.g)
+    v = state.v
+    if v_in is not None:
+        v = jnp.where(active, v + v_in, v)
+    v = jnp.where(active, v + p.alpha_m * (p.v0 - v + g), v)
+    g = jnp.where(active, g * p.decay_g, g)
+    spikes = jnp.logical_and(active, v > p.v_th)
+    if force_spike is not None:
+        spikes = jnp.logical_or(spikes, jnp.logical_and(active, force_spike))
+    v = jnp.where(spikes, p.v_r, v)
+    g = jnp.where(spikes, 0.0, g)
+    refrac = jnp.where(
+        spikes, p.ref_steps, jnp.maximum(state.refrac - 1, 0)
+    ).astype(jnp.int32)
+    return LIFState(v=v, g=g, refrac=refrac), spikes
+
+
+def lif_step_fx(
+    state: LIFState,
+    g_in_units: jax.Array,
+    params: LIFParams,
+    v_in_units: jax.Array | None = None,
+    force_spike: jax.Array | None = None,
+) -> tuple[LIFState, jax.Array]:
+    """One step, int32 fixed-point path (Loihi 2 microcode analogue).
+
+    ``g_in_units`` are raw integer weight sums (NOT scaled by w_scale) —
+    exactly what the quantized synaptic-delivery engines produce.  Internally
+    state is Q19.12 in units of w_scale.
+    """
+    p = params
+    one = p.fx_one
+    active = state.refrac <= 0
+    g = jnp.where(active, state.g + (g_in_units.astype(jnp.int32) << FX_FRAC_BITS),
+                  state.g)
+    v = state.v
+    if v_in_units is not None:
+        v = jnp.where(active, v + (v_in_units.astype(jnp.int32) << FX_FRAC_BITS), v)
+    dv = (((p.fx_v0 - v + g) >> 2) * p.fx_alpha_m16) >> 14
+    v = jnp.where(active, v + dv, v)
+    g = jnp.where(active, g - (((g >> 2) * p.fx_gdecay16) >> 14), g)
+    spikes = jnp.logical_and(active, v > p.fx_v_th)
+    if force_spike is not None:
+        spikes = jnp.logical_or(spikes, jnp.logical_and(active, force_spike))
+    v = jnp.where(spikes, p.fx_v_r, v)
+    g = jnp.where(spikes, 0, g)
+    refrac = jnp.where(
+        spikes, p.ref_steps, jnp.maximum(state.refrac - 1, 0)
+    ).astype(jnp.int32)
+    del one
+    return LIFState(v=v, g=g, refrac=refrac), spikes
+
+
+def poisson_drive(
+    key: jax.Array, n: int, rate_hz: float, dt_ms: float, mask: jax.Array | None = None
+) -> jax.Array:
+    """Bernoulli(rate*dt) spike draw for Poisson inputs / background activity."""
+    p = rate_hz * dt_ms * 1e-3
+    draws = jax.random.bernoulli(key, p, (n,))
+    if mask is not None:
+        draws = jnp.logical_and(draws, mask)
+    return draws
+
+
+def fx_to_mv(x: jax.Array, params: LIFParams) -> jax.Array:
+    return x.astype(jnp.float32) / params.fx_one * params.w_scale
+
+
+def mv_to_fx(x: jax.Array, params: LIFParams) -> jax.Array:
+    return jnp.round(x / params.w_scale * params.fx_one).astype(jnp.int32)

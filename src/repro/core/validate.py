@@ -1,0 +1,66 @@
+"""Statistical validation: spike-rate parity between implementations.
+
+The paper validates Brian2 ↔ STACS ↔ Loihi by plotting per-neuron average
+spike rates (over 10 trials) against each other and checking they fall on the
+y=x parity line (Figs 6, 12, 14, 15).  We reproduce the statistic and add
+quantitative summaries (parity RMSE, Pearson r, fraction within tolerance).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParityStats:
+    rmse_hz: float
+    pearson_r: float
+    frac_within_1hz: float
+    mean_rate_a: float
+    mean_rate_b: float
+    n_active: int
+
+    def summary(self) -> str:
+        return (f"rmse={self.rmse_hz:.3f}Hz r={self.pearson_r:.4f} "
+                f"within1Hz={self.frac_within_1hz:.3f} "
+                f"mean_a={self.mean_rate_a:.2f}Hz mean_b={self.mean_rate_b:.2f}Hz "
+                f"active={self.n_active}")
+
+
+def parity(rates_a: np.ndarray, rates_b: np.ndarray,
+           active_thresh_hz: float = 0.5) -> ParityStats:
+    """Compare index-matched per-neuron rates (averaged over trials)."""
+    rates_a = np.asarray(rates_a, np.float64)
+    rates_b = np.asarray(rates_b, np.float64)
+    active = (rates_a > active_thresh_hz) | (rates_b > active_thresh_hz)
+    a, b = rates_a[active], rates_b[active]
+    if len(a) == 0:
+        return ParityStats(0.0, 1.0, 1.0, 0.0, 0.0, 0)
+    rmse = float(np.sqrt(np.mean((a - b) ** 2)))
+    if np.std(a) > 0 and np.std(b) > 0:
+        r = float(np.corrcoef(a, b)[0, 1])
+    else:
+        r = 1.0 if np.allclose(a, b) else 0.0
+    return ParityStats(
+        rmse_hz=rmse,
+        pearson_r=r,
+        frac_within_1hz=float(np.mean(np.abs(a - b) <= 1.0)),
+        mean_rate_a=float(a.mean()),
+        mean_rate_b=float(b.mean()),
+        n_active=int(active.sum()),
+    )
+
+
+def mean_rates_over_trials(count_trials: list[np.ndarray], t_steps: int,
+                           dt_ms: float) -> np.ndarray:
+    """[trials][n] spike counts -> [n] mean rate in Hz."""
+    c = np.stack([np.asarray(x) for x in count_trials])
+    return c.mean(axis=0) / (t_steps * dt_ms * 1e-3)
+
+
+def raster_to_times(raster: np.ndarray, dt_ms: float):
+    """[T, n] bool -> (times_ms, neuron_ids) for raster plots/dumps."""
+    t, nid = np.nonzero(np.asarray(raster))
+    return t * dt_ms, nid

@@ -1,0 +1,3 @@
+from .pipeline import SyntheticLM, make_global_batch
+
+__all__ = ["SyntheticLM", "make_global_batch"]

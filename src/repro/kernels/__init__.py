@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the compute hot-spots (validated in interpret
+mode on CPU; pass interpret=False on real TPU):
+
+* lif/             fused LIF neuron update (float32 + int32 fixed-point)
+* spike_prop/      block-gated synaptic delivery (the paper's event-driven
+                   hotspot, TPU-adapted as tile-granular activity gating)
+* flash_attention/ online-softmax attention with causal/local masks
+                   (LM-stack prefill hotspot; local-window block culling)
+"""

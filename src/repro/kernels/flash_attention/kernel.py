@@ -1,0 +1,116 @@
+"""Flash attention Pallas kernel (online softmax) — the LM-stack prefill
+hotspot.
+
+Supports causal and sliding-window (local) masks — the gemma3 5:1
+local:global and recurrentgemma local-attention layers need the window mask.
+Block-level mask culling mirrors the spike_prop kernel's activity gating:
+fully-masked (q-block, kv-block) tiles are skipped via ``pl.when``, so a
+local-window layer's cost is O(S·W) not O(S²) — the structured-sparsity
+cousin of the paper's event gating.
+
+Grid: (batch*heads, q_blocks, kv_blocks), kv innermost; running max/sum and
+the output accumulator live in VMEM scratch across kv iterations.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _attn_body(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+               scale, causal, window, bq, bk, n_kv, kv_len):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = iq * bq
+    k_start = ik * bk
+
+    # block-level culling: skip tiles that are fully masked
+    live = jnp.bool_(True)
+    if causal:
+        live = jnp.logical_and(live, k_start <= q_start + bq - 1)
+    if window is not None:
+        live = jnp.logical_and(live, k_start + bk - 1 >= q_start - window)
+
+    @pl.when(live)
+    def _tile():
+        q = q_ref[0]                       # [bq, d]
+        k = k_ref[0]                       # [bk, d]
+        v = v_ref[0]                       # [bk, d]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        q_ids = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_ids = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = k_ids < kv_len              # kv padding
+        if causal:
+            mask = jnp.logical_and(mask, k_ids <= q_ids)
+        if window is not None:
+            mask = jnp.logical_and(mask, k_ids > q_ids - window - 1)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                # [bq, 1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == n_kv - 1)
+    def _fin():
+        l = l_ref[...]
+        o_ref[0] = (acc_ref[...] / jnp.where(l == 0.0, 1.0, l)
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, scale, causal=True, window=None,
+                           kv_len=None, bq=DEFAULT_BQ, bk=DEFAULT_BK,
+                           interpret=True):
+    """q: [BH, Sq, D], k/v: [BH, Skv, D] (already GQA-expanded, padded to
+    block multiples).  kv_len: true kv length before padding."""
+    BH, Sq, D = q.shape
+    Skv = k.shape[1]
+    bq = min(bq, Sq)
+    bk = min(bk, Skv)
+    n_q, n_kv = pl.cdiv(Sq, bq), pl.cdiv(Skv, bk)
+    kv_len = Skv if kv_len is None else kv_len
+
+    body = functools.partial(
+        _attn_body, scale=scale, causal=causal, window=window, bq=bq, bk=bk,
+        n_kv=n_kv, kv_len=kv_len)
+    return pl.pallas_call(
+        body,
+        grid=(BH, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,50 @@
+"""Jit'd GQA-aware wrapper for the flash attention kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_pallas
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "interpret", "bq", "bk"))
+def flash_attention(q, k, v, *, causal=True, window=None, scale=None,
+                    interpret=True, bq=128, bk=128):
+    """q: [B, H, Sq, D]; k, v: [B, Hkv, Skv, D] with H % Hkv == 0 (GQA).
+
+    window: sliding-window size (keys within [i-window, i]); None = full.
+    Returns [B, H, Sq, D] in q.dtype.
+    """
+    B, H, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    assert H % Hkv == 0
+    groups = H // Hkv
+    if scale is None:
+        scale = D ** -0.5
+
+    # GQA expansion: repeat kv heads per group (kernel sees flat BH)
+    if groups > 1:
+        k = jnp.repeat(k, groups, axis=1)
+        v = jnp.repeat(v, groups, axis=1)
+
+    bq_, bk_ = min(bq, Sq), min(bk, Skv)
+    pad_q = (-Sq) % bq_
+    pad_k = (-Skv) % bk_
+    qf = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0))).reshape(
+        B * H, Sq + pad_q, D)
+    kf = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0))).reshape(
+        B * H, Skv + pad_k, D)
+    vf = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0))).reshape(
+        B * H, Skv + pad_k, D)
+
+    out = flash_attention_pallas(
+        qf.astype(jnp.float32), kf.astype(jnp.float32),
+        vf.astype(jnp.float32), scale=scale, causal=causal, window=window,
+        kv_len=Skv, bq=bq_, bk=bk_, interpret=interpret)
+    out = out.reshape(B, H, Sq + pad_q, D)[:, :, :Sq]
+    return out.astype(q.dtype)

@@ -1,0 +1,4 @@
+from .ops import lif_update, lif_update_fx
+from .ref import lif_update_ref, lif_update_fx_ref
+
+__all__ = ["lif_update", "lif_update_fx", "lif_update_ref", "lif_update_fx_ref"]

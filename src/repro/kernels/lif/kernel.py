@@ -1,0 +1,124 @@
+"""Fused LIF neuron-update Pallas kernel (TPU target, VPU elementwise).
+
+One kernel step fuses what the jnp path does in ~10 separate HLO ops:
+synaptic-input accumulate, forward-Euler membrane/conductance update,
+threshold compare, reset, refractory countdown, and spike emission — the
+per-timestep neuron program of the paper's Loihi 2 microcode, as a TPU
+vector kernel.
+
+Layout: neurons are viewed as [rows, 128] (128 = TPU lane width); the grid
+tiles rows in blocks of ``BLK_ROWS`` sublanes.  All operands live in VMEM.
+
+Float32 and int32 fixed-point (Q19.12, Loihi-analogue) variants share the
+structure; coefficients arrive via closure as compile-time constants, exactly
+like Loihi microcode "user-defined constants".
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.neuron import FX_FRAC_BITS, LIFParams
+
+BLK_ROWS = 8          # sublane tile
+LANES = 128           # lane width
+
+
+def _lif_body_f32(v_ref, g_ref, ref_ref, gin_ref, vin_ref, force_ref,
+                  v_out, g_out, refr_out, spk_out, *, alpha_m, decay_g,
+                  v0, v_r, v_th, ref_steps):
+    v = v_ref[...]
+    g = g_ref[...]
+    refrac = ref_ref[...]
+    active = refrac <= 0
+    g = jnp.where(active, g + gin_ref[...], g)
+    v = jnp.where(active, v + vin_ref[...], v)
+    v = jnp.where(active, v + alpha_m * (v0 - v + g), v)
+    g = jnp.where(active, g * decay_g, g)
+    spikes = jnp.logical_and(active, v > v_th)
+    spikes = jnp.logical_or(spikes, jnp.logical_and(active,
+                                                    force_ref[...] != 0))
+    v = jnp.where(spikes, v_r, v)
+    g = jnp.where(spikes, 0.0, g)
+    refrac = jnp.where(spikes, ref_steps,
+                       jnp.maximum(refrac - 1, 0)).astype(jnp.int32)
+    v_out[...] = v
+    g_out[...] = g
+    refr_out[...] = refrac
+    spk_out[...] = spikes.astype(jnp.int32)
+
+
+def _lif_body_fx(v_ref, g_ref, ref_ref, gin_ref, vin_ref, force_ref,
+                 v_out, g_out, refr_out, spk_out, *, fx_alpha_m16,
+                 fx_gdecay16, fx_v0, fx_v_r, fx_v_th, ref_steps):
+    v = v_ref[...]
+    g = g_ref[...]
+    refrac = ref_ref[...]
+    active = refrac <= 0
+    g = jnp.where(active, g + (gin_ref[...] << FX_FRAC_BITS), g)
+    v = jnp.where(active, v + (vin_ref[...] << FX_FRAC_BITS), v)
+    # 16-bit coefficients via the narrow-multiplier form (see core.neuron)
+    dv = (((fx_v0 - v + g) >> 2) * fx_alpha_m16) >> 14
+    v = jnp.where(active, v + dv, v)
+    g = jnp.where(active, g - (((g >> 2) * fx_gdecay16) >> 14), g)
+    spikes = jnp.logical_and(active, v > fx_v_th)
+    spikes = jnp.logical_or(spikes, jnp.logical_and(active,
+                                                    force_ref[...] != 0))
+    v = jnp.where(spikes, fx_v_r, v)
+    g = jnp.where(spikes, 0, g)
+    refrac = jnp.where(spikes, ref_steps,
+                       jnp.maximum(refrac - 1, 0)).astype(jnp.int32)
+    v_out[...] = v
+    g_out[...] = g
+    refr_out[...] = refrac
+    spk_out[...] = spikes.astype(jnp.int32)
+
+
+def _pallas_lif(v, g, refrac, g_in, v_in, force, body, out_dtype,
+                interpret: bool):
+    rows = v.shape[0]
+    blk = min(BLK_ROWS, rows)
+    grid = (pl.cdiv(rows, blk),)
+    spec = pl.BlockSpec((blk, LANES), lambda i: (i, 0))
+    return pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=[spec] * 6,
+        out_specs=[spec] * 4,
+        out_shape=[
+            jax.ShapeDtypeStruct(v.shape, out_dtype),
+            jax.ShapeDtypeStruct(v.shape, out_dtype),
+            jax.ShapeDtypeStruct(v.shape, jnp.int32),
+            jax.ShapeDtypeStruct(v.shape, jnp.int32),
+        ],
+        interpret=interpret,
+    )(v, g, refrac, g_in, v_in, force)
+
+
+@functools.partial(jax.jit, static_argnames=("params", "interpret"))
+def lif_update_f32(v, g, refrac, g_in, v_in, force, *, params: LIFParams,
+                   interpret: bool = True):
+    """All args [rows, 128] float32 (refrac/force int32)."""
+    body = functools.partial(
+        _lif_body_f32, alpha_m=params.alpha_m, decay_g=params.decay_g,
+        v0=params.v0, v_r=params.v_r, v_th=params.v_th,
+        ref_steps=params.ref_steps)
+    return _pallas_lif(v, g, refrac, g_in, v_in, force, body, jnp.float32,
+                       interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("params", "interpret"))
+def lif_update_fx32(v, g, refrac, g_in, v_in, force, *, params: LIFParams,
+                    interpret: bool = True):
+    """Fixed-point variant; v/g int32 Q19.12, g_in/v_in raw weight units."""
+    body = functools.partial(
+        _lif_body_fx, fx_alpha_m16=params.fx_alpha_m16,
+        fx_gdecay16=params.fx_gdecay16, fx_v0=params.fx_v0,
+        fx_v_r=params.fx_v_r, fx_v_th=params.fx_v_th,
+        ref_steps=params.ref_steps)
+    return _pallas_lif(v, g, refrac, g_in, v_in, force, body, jnp.int32,
+                       interpret)

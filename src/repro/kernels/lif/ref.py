@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the fused LIF kernel — delegates to the core neuron
+math (the same functions Brian2-parity is validated against), reshaped to the
+kernel's [rows, 128] layout."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.neuron import LIFParams, LIFState, lif_step, lif_step_fx
+
+
+def lif_update_ref(v, g, refrac, g_in, v_in, force, *, params: LIFParams):
+    shape = v.shape
+    st = LIFState(v=v.reshape(-1), g=g.reshape(-1), refrac=refrac.reshape(-1))
+    new, spk = lif_step(st, g_in.reshape(-1), params, v_in.reshape(-1),
+                        force.reshape(-1) != 0)
+    return (new.v.reshape(shape), new.g.reshape(shape),
+            new.refrac.reshape(shape), spk.astype(jnp.int32).reshape(shape))
+
+
+def lif_update_fx_ref(v, g, refrac, g_in, v_in, force, *, params: LIFParams):
+    shape = v.shape
+    st = LIFState(v=v.reshape(-1), g=g.reshape(-1), refrac=refrac.reshape(-1))
+    new, spk = lif_step_fx(st, g_in.reshape(-1), params, v_in.reshape(-1),
+                           force.reshape(-1) != 0)
+    return (new.v.reshape(shape), new.g.reshape(shape),
+            new.refrac.reshape(shape), spk.astype(jnp.int32).reshape(shape))

@@ -1,0 +1,5 @@
+from .ops import BlockedSynapses, build_blocked, spike_deliver
+from .ref import spike_deliver_ref, spike_deliver_dense_ref
+
+__all__ = ["BlockedSynapses", "build_blocked", "spike_deliver",
+           "spike_deliver_ref", "spike_deliver_dense_ref"]

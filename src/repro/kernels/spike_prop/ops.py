@@ -1,0 +1,99 @@
+"""Blocked-ELL format builder + jit'd wrapper for the spike_prop kernel."""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.connectome import Connectome
+from .kernel import SRC_BLK, TGT_BLK, spike_deliver_pallas
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockedSynapses:
+    """Dense (TGT_BLK x SRC_BLK) weight tiles for nonempty block pairs.
+
+    blk_id[tb, e]  = source-block id of target-block tb's e-th tile
+                     (pad tiles point at the zero spike block n_sb).
+    weights[tb, e] = [TGT_BLK, SRC_BLK] dense tile (0 where no synapse).
+    """
+
+    blk_id: np.ndarray    # [n_tb, E] int32
+    weights: np.ndarray   # [n_tb, E, TGT_BLK, SRC_BLK] f32
+    n: int                # original neuron count
+    n_tb: int
+    n_sb: int
+    occupancy: float      # nnz / stored-tile capacity (tile-format density)
+
+    @property
+    def tiles_stored(self) -> int:
+        return int((self.blk_id < self.n_sb).sum())
+
+
+def build_blocked(c: Connectome, quantized: np.ndarray | None = None
+                  ) -> BlockedSynapses:
+    """Group the target-major CSR into dense tiles by (tgt//TB, src//SB)."""
+    n = c.n
+    n_tb = (n + TGT_BLK - 1) // TGT_BLK
+    n_sb = (n + SRC_BLK - 1) // SRC_BLK
+    w = (quantized if quantized is not None else c.in_weights).astype(np.float32)
+    tgt = np.repeat(np.arange(n, dtype=np.int64), c.fan_in)
+    src = c.in_indices.astype(np.int64)
+    tb, sb = tgt // TGT_BLK, src // SRC_BLK
+
+    pair = tb * n_sb + sb
+    order = np.argsort(pair, kind="stable")
+    pair_s = pair[order]
+    uniq_pairs, first = np.unique(pair_s, return_index=True)
+    tiles_per_tb = np.bincount((uniq_pairs // n_sb).astype(np.int64),
+                               minlength=n_tb)
+    E = int(tiles_per_tb.max()) if len(tiles_per_tb) else 1
+
+    blk_id = np.full((n_tb, E), n_sb, dtype=np.int32)
+    weights = np.zeros((n_tb, E, TGT_BLK, SRC_BLK), dtype=np.float32)
+    # slot index of each unique pair within its target block
+    slot = np.arange(len(uniq_pairs)) - np.repeat(
+        np.concatenate([[0], np.cumsum(tiles_per_tb)[:-1]]), tiles_per_tb)
+    pair_to_slot = dict(zip(uniq_pairs.tolist(), slot.tolist()))
+    blk_id[(uniq_pairs // n_sb).astype(int), slot.astype(int)] = (
+        uniq_pairs % n_sb)
+    e_of_pair = np.empty(len(pair), dtype=np.int64)
+    e_of_pair[order] = np.repeat(slot, np.diff(
+        np.concatenate([first, [len(pair_s)]])))
+    weights[tb, e_of_pair, tgt % TGT_BLK, src % SRC_BLK] += w
+    del pair_to_slot
+    occ = c.nnz / max(1, (blk_id < n_sb).sum() * TGT_BLK * SRC_BLK)
+    return BlockedSynapses(blk_id=blk_id, weights=weights, n=n, n_tb=n_tb,
+                           n_sb=n_sb, occupancy=float(occ))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _deliver(blk_id, weights, spk_pad, interpret=True):
+    n_sb = spk_pad.shape[0] - 1
+    nspk = jnp.concatenate([
+        spk_pad[:n_sb].sum(axis=1).astype(jnp.int32),
+        jnp.zeros((1,), jnp.int32)])
+    return spike_deliver_pallas(blk_id, weights, spk_pad, nspk,
+                                interpret=interpret)
+
+
+def spike_deliver(bs: BlockedSynapses, spikes, *, interpret: bool = True,
+                  device_arrays=None):
+    """spikes: [n] bool/float.  Returns g drive [n] f32.
+
+    ``device_arrays``: optional (blk_id, weights) jnp arrays to avoid
+    re-uploading the tile store every call.
+    """
+    n, n_sb = bs.n, bs.n_sb
+    spk = jnp.asarray(spikes, jnp.float32)
+    spk = jnp.pad(spk, (0, n_sb * SRC_BLK - n))
+    spk_pad = jnp.concatenate([spk.reshape(n_sb, SRC_BLK),
+                               jnp.zeros((1, SRC_BLK), jnp.float32)])
+    blk_id, weights = (device_arrays if device_arrays is not None
+                       else (jnp.asarray(bs.blk_id), jnp.asarray(bs.weights)))
+    out = _deliver(blk_id, weights, spk_pad, interpret=interpret)
+    return out.reshape(-1)[:n]

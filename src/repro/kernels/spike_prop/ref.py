@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for the block-gated spike delivery kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.connectome import Connectome
+
+
+def spike_deliver_dense_ref(c: Connectome, spikes,
+                            quantized: np.ndarray | None = None):
+    """Oracle 1: dense W @ s against the original connectome."""
+    w = (quantized if quantized is not None else c.in_weights)
+    dense = np.zeros((c.n, c.n), np.float32)
+    tgt = np.repeat(np.arange(c.n), c.fan_in)
+    dense[tgt, c.in_indices] = w.astype(np.float32)
+    return jnp.asarray(dense) @ jnp.asarray(spikes, jnp.float32)
+
+
+def spike_deliver_ref(bs, spikes):
+    """Oracle 2: tile math in plain jnp over the *blocked* store —
+    isolates kernel-mechanics bugs from format-builder bugs."""
+    from .kernel import SRC_BLK
+    n, n_sb = bs.n, bs.n_sb
+    spk = jnp.asarray(spikes, jnp.float32)
+    spk = jnp.pad(spk, (0, n_sb * SRC_BLK - n))
+    blocks = jnp.concatenate([spk.reshape(n_sb, SRC_BLK),
+                              jnp.zeros((1, SRC_BLK), jnp.float32)])
+    sv = blocks[jnp.asarray(bs.blk_id)]             # [n_tb, E, SRC_BLK]
+    out = jnp.einsum("tebs,tes->tb", jnp.asarray(bs.weights), sv)
+    return out.reshape(-1)[:n]

@@ -1,0 +1,309 @@
+"""Shared builders: (arch x shape-cell x mesh) -> jit-ready step function
+with abstract inputs + shardings.  Used by dryrun.py (512-device lower +
+compile), by tests (small host meshes), and by the perf loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.shapes import SHAPES, cache_specs, cell_supported, input_specs
+from repro.models import (ModelConfig, abstract_params, decode_step,
+                          param_axes, prefill)
+from repro.optim import AdamW, cosine_schedule
+from repro.parallel import act
+from repro.parallel.sharding import (DEFAULT_RULES, ShardingRules,
+                                     batch_spec, data_axis_size,
+                                     make_param_shardings, solve_rules)
+from repro.train import make_train_step
+from repro.train.train_step import TrainState, init_train_state
+
+
+class BuiltStep(NamedTuple):
+    fn: Any                 # python callable, jit-able
+    in_avals: tuple         # abstract args
+    in_shardings: tuple
+    donate_argnums: tuple
+    kind: str
+    meta: dict
+    policy: dict            # activation sharding policy (repro.parallel.act)
+    out_shardings: Any = None
+
+
+def _act_policy(mesh: Mesh, cfg, cell: str) -> dict:
+    """Activation-sharding policy for this (cfg, cell, mesh)."""
+    sizes = _mesh_sizes(mesh)
+    dp = _dp_axes(mesh)
+    n_dp = int(np.prod([sizes[a] for a in dp])) if dp else 1
+    model_n = sizes.get("model", 1)
+    B = SHAPES[cell]["batch"]
+    bax = dp if (dp and B % n_dp == 0) else None
+    policy = {"residual": P(bax, None, None),
+              "moe_buf": P(bax, None, None, None)}
+    if model_n > 1 and cfg.vocab % model_n == 0:
+        policy["logits"] = P(bax, None, "model")
+    return policy
+
+
+def _mesh_sizes(mesh: Mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _logits_sharding(mesh, cfg, B):
+    sizes = _mesh_sizes(mesh)
+    dp = _dp_axes(mesh)
+    n_dp = int(np.prod([sizes[a] for a in dp])) if dp else 1
+    model_n = sizes.get("model", 1)
+    bax = dp if (dp and B % n_dp == 0) else None
+    vax = "model" if (model_n > 1 and cfg.vocab % model_n == 0) else None
+    return NamedSharding(mesh, P(bax, vax))
+
+
+def _dp_axes(mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _shard_batch_tree(mesh, tree):
+    """Leading-dim data-parallel sharding for a batch pytree."""
+    dp = _dp_axes(mesh)
+    n_dp = int(np.prod([_mesh_sizes(mesh)[a] for a in dp])) if dp else 1
+
+    def spec(x):
+        if x.ndim == 0 or (dp and x.shape[0] % n_dp != 0) or not dp:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P(dp, *([None] * (x.ndim - 1))))
+
+    return jax.tree.map(spec, tree)
+
+
+# decode-cache sharding strategy: "auto" (heads if divisible, else
+# sequence) or "heads_padded" (always the kv-heads dim — GSPMD pads
+# non-divisible heads; trades idle compute/duplicated cache rows for
+# fully cache-local scatter + attention, the §Perf decode iteration)
+CACHE_MODE = "auto"
+
+
+def _cache_sharding(mesh, aval, cfg):
+    """KV/state cache sharding.
+
+    Normal case: batch dim over the data axes, then the first
+    model-divisible dim after it (heads if divisible, else sequence) over
+    "model".  Unshardable batch (long_500k B=1): fold data+model onto the
+    longest divisible dim (the 524288-entry sequence) so the cache always
+    distributes over the full mesh — a replicated 500k cache would be
+    ~200 GiB/device."""
+    sizes = _mesh_sizes(mesh)
+    model_n = sizes.get("model", 1)
+    dp = _dp_axes(mesh)
+    n_dp = int(np.prod([sizes[a] for a in dp])) if dp else 1
+    shape = aval.shape
+    spec = [None] * len(shape)
+    # batch dim: dim 0 (tail caches) or dim 1 (scan-stacked caches)
+    batch_dim = None
+    for i in (1, 0):
+        if i < len(shape) and dp and shape[i] % n_dp == 0 and shape[i] >= n_dp:
+            batch_dim = i
+            break
+    if batch_dim is not None:
+        spec[batch_dim] = dp
+        if model_n > 1:
+            if (CACHE_MODE == "heads_padded" and len(shape) >= batch_dim + 3
+                    and shape[batch_dim + 1] > 1):
+                spec[batch_dim + 1] = "model"   # kv-heads, padded if uneven
+                return NamedSharding(mesh, P(*spec))
+            for j in range(batch_dim + 1, len(shape)):
+                if shape[j] % model_n == 0 and shape[j] >= model_n:
+                    spec[j] = "model"
+                    break
+        return NamedSharding(mesh, P(*spec))
+    # batch unshardable: put all mesh axes on the longest divisible dim
+    total = n_dp * model_n
+    dims = sorted(range(1, len(shape)), key=lambda j: -shape[j])
+    for j in dims:
+        if shape[j] % total == 0 and shape[j] >= total:
+            spec[j] = dp + ("model",) if dp else "model"
+            return NamedSharding(mesh, P(*spec))
+    for j in dims:
+        if model_n > 1 and shape[j] % model_n == 0 and shape[j] >= model_n:
+            spec[j] = "model"
+            break
+    return NamedSharding(mesh, P(*spec))
+
+
+def build_step(arch: str, cell: str, mesh: Mesh,
+               rules: ShardingRules = DEFAULT_RULES,
+               microbatches: int = 0, smoke: bool = False,
+               overrides: dict | None = None) -> BuiltStep:
+    """Build the lower-ready step for one (arch, cell, mesh) combination."""
+    cfg = get_config(arch, smoke=smoke)
+    spec = SHAPES[cell]
+    kind = spec["kind"]
+    ok, why = cell_supported(cfg, cell)
+    if not ok:
+        raise ValueError(f"{arch} x {cell} unsupported: {why}")
+
+    if not smoke:
+        # production dtypes: bf16 compute everywhere; serving weights bf16
+        over = {"compute_dtype": jnp.bfloat16}
+        if kind in ("prefill", "decode"):
+            over["param_dtype"] = jnp.bfloat16
+            over["remat"] = False
+        if overrides:
+            over.update(overrides)
+        cfg = dataclasses.replace(cfg, **over)
+    elif overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+
+    aparams = abstract_params(cfg)
+    axes = param_axes(cfg)
+    param_sh, fallbacks = make_param_shardings(mesh, axes, aparams, rules)
+    meta = {"arch": arch, "cell": cell, "kind": kind,
+            "mesh": dict(zip(mesh.axis_names, mesh.devices.shape)),
+            "sharding_fallbacks": [f"{n}:{d}%{a}={s}"
+                                   for (n, d, a, s) in fallbacks]}
+    policy = _act_policy(mesh, cfg, cell)
+
+    ins = input_specs(cfg, cell, smoke_scale=smoke)
+
+    if kind == "train":
+        if microbatches <= 0:
+            microbatches = default_microbatches(arch, cell)
+        opt = AdamW(lr=cosine_schedule(3e-4, 2000, 100_000),
+                    state_dtype=optimizer_state_dtype(arch))
+        step = make_train_step(cfg, opt, microbatches=microbatches)
+        astate = jax.eval_shape(
+            lambda ap: init_train_state(ap, opt), aparams)
+        state_sh = TrainState(
+            params=param_sh,
+            opt=type(astate.opt)(step=NamedSharding(mesh, P()),
+                                 m=param_sh, v=param_sh),
+            residual=None)
+        batch_sh = _shard_batch_tree(mesh, ins["batch"])
+        meta["microbatches"] = microbatches
+        meta["opt_state_dtype"] = jnp.dtype(optimizer_state_dtype(arch)).name
+        return BuiltStep(fn=step, in_avals=(astate, ins["batch"]),
+                         in_shardings=(state_sh, batch_sh),
+                         donate_argnums=(0,), kind=kind, meta=meta,
+                         policy=policy)
+
+    if kind == "prefill":
+        B = ins["batch"]["tokens"].shape[0]
+        S = spec["seq"]
+        if smoke:
+            S = max(32, S // 512)
+        max_len = cfg.dec_max if cfg.is_encdec else S
+        fn = functools.partial(_prefill_fn, cfg=cfg, max_len=max_len)
+        batch_sh = _shard_batch_tree(mesh, ins["batch"])
+        # explicit output shardings: without them the (huge) returned kv
+        # cache can come back badly distributed (observed: 93 GiB/device
+        # for grok prefill_32k with unspecified outputs)
+        with act.policy(policy), mesh:
+            out_aval = jax.eval_shape(fn, aparams, ins["batch"])
+        out_sh = (_logits_sharding(mesh, cfg, B),
+                  jax.tree.map(lambda a: _cache_sharding(mesh, a, cfg),
+                               out_aval[1]))
+        return BuiltStep(fn=fn, in_avals=(aparams, ins["batch"]),
+                         in_shardings=(param_sh, batch_sh),
+                         donate_argnums=(), kind=kind, meta=meta,
+                         policy=policy, out_shardings=out_sh)
+
+    # decode
+    dtype = cfg.param_dtype if not smoke else jnp.float32
+    acache = cache_specs(cfg, cell, dtype=dtype, smoke_scale=smoke)
+    cache_sh = jax.tree.map(lambda a: _cache_sharding(mesh, a, cfg), acache)
+    tok_sh = _shard_batch_tree(mesh, {"t": ins["tokens"]})["t"]
+    pos_sh = NamedSharding(mesh, P())
+    fn = functools.partial(_decode_fn, cfg=cfg)
+    B = ins["tokens"].shape[0]
+    out_sh = (_logits_sharding(mesh, cfg, B), cache_sh)
+    return BuiltStep(
+        fn=fn,
+        in_avals=(aparams, acache, ins["tokens"], ins["pos"]),
+        in_shardings=(param_sh, cache_sh, tok_sh, pos_sh),
+        donate_argnums=(1,), kind=kind, meta=meta, policy=policy,
+        out_shardings=out_sh)
+
+
+def _prefill_fn(params, batch, *, cfg, max_len):
+    return prefill(params, batch, cfg, max_len)
+
+
+def _decode_fn(params, cache, tokens, pos, *, cfg):
+    return decode_step(params, cache, tokens, pos, cfg)
+
+
+def default_microbatches(arch: str, cell: str) -> int:
+    """Activation-memory heuristic (derivation in EXPERIMENTS.md §Dry-run):
+    scan residuals per device ~ L x B_loc/M x S x d_model x 2B must sit
+    well under HBM after params+optimizer."""
+    big = {"grok-1-314b": 16, "llava-next-34b": 16, "command-r-35b": 16,
+           "llama4-scout-17b-a16e": 8, "qwen2.5-14b": 8, "gemma3-12b": 8,
+           "phi3-medium-14b": 8}
+    return big.get(arch, 4)
+
+
+def optimizer_state_dtype(arch: str):
+    """grok-1's 314B at 12B/param would alone exceed v5e HBM on 256 chips
+    (14.7 GiB/device); bf16 m/v halves it (documented trade-off)."""
+    return jnp.bfloat16 if arch == "grok-1-314b" else jnp.float32
+
+
+def analytic_bytes(built: BuiltStep) -> dict:
+    """Exact per-device resident bytes by input category (independent of
+    the CPU backend's bf16->f32 legalization, which inflates
+    memory_analysis temp on this container; see EXPERIMENTS.md)."""
+    import math
+
+    def tree_bytes(aval_tree, sh_tree):
+        total = 0
+        avals = jax.tree.leaves(aval_tree)
+        shs = jax.tree.leaves(sh_tree,
+                              is_leaf=lambda x: isinstance(x, NamedSharding))
+        for a, sh in zip(avals, shs):
+            shard = sh.shard_shape(a.shape) if isinstance(
+                sh, NamedSharding) else a.shape
+            total += math.prod(shard) * jnp.dtype(a.dtype).itemsize
+        return total
+
+    cats = {}
+    if built.kind == "train":
+        state, batch = built.in_avals
+        state_sh, batch_sh = built.in_shardings
+        cats["params"] = tree_bytes(state.params, state_sh.params)
+        cats["opt_state"] = tree_bytes(state.opt, state_sh.opt)
+        cats["batch"] = tree_bytes(batch, batch_sh)
+    elif built.kind == "prefill":
+        params, batch = built.in_avals
+        p_sh, b_sh = built.in_shardings
+        cats["params"] = tree_bytes(params, p_sh)
+        cats["batch"] = tree_bytes(batch, b_sh)
+        cats["cache_out"] = tree_bytes(
+            jax.eval_shape(built.fn, *built.in_avals)[1],
+            built.out_shardings[1])
+    else:
+        params, cache, toks, pos = built.in_avals
+        p_sh, c_sh, *_ = built.in_shardings
+        cats["params"] = tree_bytes(params, p_sh)
+        cats["cache"] = tree_bytes(cache, c_sh)
+    cats["total"] = sum(cats.values())
+    return cats
+
+
+def lower_and_compile(built: BuiltStep, mesh: Mesh):
+    kw = {}
+    if built.out_shardings is not None:
+        kw["out_shardings"] = built.out_shardings
+    with act.policy(built.policy), mesh:
+        jitted = jax.jit(built.fn, in_shardings=built.in_shardings,
+                         donate_argnums=built.donate_argnums, **kw)
+        lowered = jitted.lower(*built.in_avals)
+        compiled = lowered.compile()
+    return lowered, compiled

@@ -1,0 +1,150 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production meshes and record memory/cost/collective analysis.
+
+MUST be run as its own process (the XLA_FLAGS line above executes before
+any jax import, including the ones below):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-12b \
+        --cell train_4k [--multi-pod] [--out experiments/dryrun]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Outputs one JSON per cell: per-device argument/temp bytes (proves fit),
+per-device HLO FLOPs + bytes accessed, collective link-bytes breakdown —
+the §Roofline inputs.
+"""
+
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+
+from repro.configs import all_arch_names, get_config           # noqa: E402
+from repro.configs.shapes import SHAPES, cell_supported        # noqa: E402
+from repro.launch.build import (analytic_bytes, build_step,    # noqa: E402
+                                lower_and_compile)             # noqa: E402
+from repro.launch.hlo import analyze_hlo                       # noqa: E402
+from repro.launch.mesh import make_production_mesh             # noqa: E402
+
+
+def run_cell(arch: str, cell: str, multi_pod: bool, out_dir: str,
+             microbatches: int = 0, overrides: dict | None = None,
+             tag: str = "", mesh_shape: tuple | None = None) -> dict:
+    if mesh_shape is not None:
+        import jax as _jax
+        from jax.sharding import AxisType
+        mesh = _jax.make_mesh(mesh_shape, ("data", "model"),
+                              axis_types=(AxisType.Auto,) * 2)
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    built = build_step(arch, cell, mesh, microbatches=microbatches,
+                       overrides=overrides)
+    lowered, compiled = lower_and_compile(built, mesh)
+    t1 = time.time()
+
+    mem = compiled.memory_analysis()
+    xla_cost = compiled.cost_analysis()
+    xla_cost = xla_cost[0] if isinstance(xla_cost, (list, tuple)) else xla_cost
+    hlo = analyze_hlo(compiled.as_text())
+
+    mesh_name = ("x".join(str(x) for x in mesh_shape) if mesh_shape
+                 else ("pod2x16x16" if multi_pod else "16x16"))
+    rec = {
+        "arch": arch, "cell": cell,
+        "mesh": mesh_name,
+        "n_devices": int(mesh.devices.size),
+        "kind": built.kind,
+        "meta": built.meta,
+        "compile_s": round(t1 - t0, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_device_bytes": (mem.argument_size_in_bytes
+                                  + mem.temp_size_in_bytes
+                                  + mem.output_size_in_bytes
+                                  - mem.alias_size_in_bytes),
+        },
+        "cost": {
+            # trip-count-aware totals from the HLO walk (XLA's own
+            # cost_analysis counts while bodies once; kept for reference)
+            "flops_per_device": hlo.flops,
+            "bytes_per_device": hlo.bytes,
+            "xla_flops_one_trip": xla_cost.get("flops", 0.0),
+            "xla_bytes_one_trip": xla_cost.get("bytes accessed", 0.0),
+        },
+        "collectives": hlo.summary(),
+        "analytic_bytes": analytic_bytes(built),
+        "while_trips": hlo.while_trips[:40],
+    }
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = f"_{tag}" if tag else ""
+        path = os.path.join(
+            out_dir, f"{arch}_{cell}_{rec['mesh']}{suffix}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+    print(f"[dryrun] {arch} x {cell} x {rec['mesh']}: "
+          f"compile {rec['compile_s']}s, "
+          f"peak/device {rec['memory']['peak_device_bytes']/2**30:.2f} GiB "
+          f"(state {rec['analytic_bytes']['total']/2**30:.2f}), "
+          f"{rec['cost']['flops_per_device']/1e9:.1f} GFLOP/device, "
+          f"link {hlo.link_bytes/2**20:.1f} MiB/device")
+    print("  memory_analysis:", mem)
+    print("  cost_analysis: flops=%.3e bytes=%.3e" % (
+        rec["cost"]["flops_per_device"], rec["cost"]["bytes_per_device"]))
+    return rec
+
+
+def iter_cells():
+    for arch in all_arch_names():
+        cfg = get_config(arch)
+        for cell in SHAPES:
+            ok, why = cell_supported(cfg, cell)
+            yield arch, cell, ok, why
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--cell", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--continue-on-error", action="store_true")
+    args = ap.parse_args()
+
+    results, failures = [], []
+    if args.all:
+        for arch, cell, ok, why in iter_cells():
+            if not ok:
+                print(f"[dryrun] SKIP {arch} x {cell}: {why}")
+                results.append({"arch": arch, "cell": cell, "skipped": why})
+                continue
+            try:
+                results.append(run_cell(arch, cell, args.multi_pod,
+                                        args.out, args.microbatches))
+            except Exception as e:  # noqa: BLE001
+                traceback.print_exc()
+                failures.append((arch, cell, str(e)))
+                if not args.continue_on_error:
+                    raise
+    else:
+        run_cell(args.arch, args.cell, args.multi_pod, args.out,
+                 args.microbatches)
+    if failures:
+        print(f"[dryrun] {len(failures)} FAILURES:", failures)
+        raise SystemExit(1)
+    print(f"[dryrun] complete: {len(results)} cells")
+
+
+if __name__ == "__main__":
+    main()

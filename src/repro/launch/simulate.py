@@ -1,0 +1,104 @@
+"""FlyWire simulation driver (the paper's workload as a CLI).
+
+    PYTHONPATH=src python -m repro.launch.simulate --scale smoke \
+        --engine event --trials 3
+    PYTHONPATH=src python -m repro.launch.simulate --scale full --parity
+    PYTHONPATH=src python -m repro.launch.simulate --distributed --cores 4
+
+--distributed partitions with the paper's greedy capacity scheme and runs
+the shard_map simulator (one partition per host device; set
+XLA_FLAGS=--xla_force_host_platform_device_count=N first, or use
+--emulate).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.configs.flywire import CONFIG, CONFIG_1MS, SMOKE
+from repro.core import (CoreBudget, SimConfig, caps_from_budget,
+                        greedy_partition, parity, simulate,
+                        synthetic_flywire_cached)
+from repro.core.dcsr import build_dcsr
+from repro.core.distributed import DistConfig, simulate_distributed
+from repro.core.engine import spike_rates_hz
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", choices=["smoke", "bench", "full"],
+                    default="bench")
+    ap.add_argument("--engine", default="event",
+                    choices=["dense", "csr", "ell", "event", "binned"])
+    ap.add_argument("--dt", type=float, default=0.1, choices=[0.1, 1.0])
+    ap.add_argument("--trials", type=int, default=1)
+    ap.add_argument("--t-ms", type=float, default=0.0)
+    ap.add_argument("--background-hz", type=float, default=0.0)
+    ap.add_argument("--parity", action="store_true",
+                    help="compare against the float csr reference")
+    ap.add_argument("--distributed", action="store_true")
+    ap.add_argument("--emulate", action="store_true")
+    ap.add_argument("--cores", type=int, default=4)
+    args = ap.parse_args()
+
+    fw = {"smoke": SMOKE, "bench": dataclasses.replace(
+        SMOKE, n_neurons=20_000, target_synapses=600_000, t_sim_ms=100.0),
+        "full": (CONFIG if args.dt == 0.1 else CONFIG_1MS)}[args.scale]
+    c = synthetic_flywire_cached(n=fw.n_neurons, seed=0,
+                                 target_synapses=fw.target_synapses)
+    print(f"[simulate] connectome: {c.stats()}")
+    sugar = fw.sugar_neurons()
+    t_ms = args.t_ms or fw.t_sim_ms
+    cfg = dataclasses.replace(fw.sim, engine=args.engine,
+                              background_rate_hz=args.background_hz)
+    t_steps = int(round(t_ms / cfg.params.dt))
+
+    if args.distributed:
+        caps = caps_from_budget(CoreBudget.tpu_vmem(), "sar")
+        p = greedy_partition(c, caps, scheme="sar")
+        from repro.core.partition import pad_to_uniform
+        p = pad_to_uniform(p, args.cores, c.n)
+        d = build_dcsr(c, p, quantize_bits=cfg.quantize_bits)
+        print(f"[simulate] distributed over {d.n_parts} partitions "
+              f"(U={d.part_size}, S_max={d.s_max})")
+        dcfg = DistConfig(sim=cfg, scheme="event")
+        t0 = time.time()
+        res = simulate_distributed(d, dcfg, t_steps, sugar, seed=0,
+                                   emulate=args.emulate)
+        counts = res.counts
+        print(f"[simulate] {t_steps} steps in {time.time()-t0:.2f}s "
+              f"(dropped={res.dropped})")
+    else:
+        t0 = time.time()
+        res = simulate(c, cfg, t_steps, sugar, seed=0)
+        counts = np.asarray(res.counts)
+        print(f"[simulate] {t_steps} steps in {time.time()-t0:.2f}s "
+              f"(dropped={int(res.dropped)})")
+
+    rates = counts / (t_ms * 1e-3)
+    active = (rates > 0.5).sum()
+    print(f"[simulate] total spikes {int(counts.sum())}, "
+          f"active neurons {active} ({active/c.n:.2%}), "
+          f"mean active rate {rates[rates>0.5].mean() if active else 0:.1f} Hz")
+
+    if args.parity:
+        ref_cfg = SimConfig(engine="csr", params=cfg.params,
+                            poisson_to_v=True)
+        trials_a = [np.asarray(simulate(c, ref_cfg, t_steps, sugar,
+                                        seed=10 + i).counts)
+                    for i in range(args.trials)]
+        trials_b = [np.asarray(simulate(c, cfg, t_steps, sugar,
+                                        seed=20 + i).counts)
+                    for i in range(args.trials)]
+        ra = np.stack(trials_a).mean(0) / (t_ms * 1e-3)
+        rb = np.stack(trials_b).mean(0) / (t_ms * 1e-3)
+        print("[simulate] parity vs float reference:",
+              parity(ra, rb).summary())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,144 @@
+"""End-to-end training driver with fault tolerance.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-14b --smoke \
+        --steps 200 --batch 8 --seq 64 --ckpt-dir /tmp/ckpt --ckpt-every 50
+
+Features exercised here (and by tests/test_fault.py):
+  * periodic async sharded checkpoints,
+  * restart/resume from the latest checkpoint (--resume),
+  * injected node failures (--fail-at N) with supervisor restart,
+  * injected stragglers (--straggle-at N) and z-score detection,
+  * elastic restore onto a different mesh (--data/--model flags may differ
+    between runs; restore re-device_puts onto the current mesh).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import SyntheticLM
+from repro.launch.mesh import make_host_mesh
+from repro.models import init_params, param_axes, abstract_params
+from repro.optim import AdamW, cosine_schedule
+from repro.parallel.sharding import make_param_shardings
+from repro.train import (FaultConfig, StragglerDetector, latest_step,
+                         make_train_step, restore_checkpoint,
+                         save_checkpoint, simulate_failures)
+from repro.train.fault import InjectedFailure, run_with_recovery
+from repro.train.train_step import TrainState, init_train_state
+
+
+def build(args):
+    cfg = get_config(args.arch, smoke=args.smoke)
+    try:
+        mesh = make_host_mesh(data=args.data, model=args.model)
+    except ValueError:
+        mesh = None
+    opt = AdamW(lr=cosine_schedule(args.lr, args.warmup, args.steps))
+    step_fn = make_train_step(cfg, opt, microbatches=args.microbatches)
+    return cfg, mesh, opt, step_fn
+
+
+def run(args, resume_signal=None) -> int:
+    cfg, mesh, opt, step_fn = build(args)
+    ds = SyntheticLM(vocab=cfg.vocab, seq=args.seq, global_batch=args.batch,
+                     seed=args.seed)
+    params = init_params(jax.random.PRNGKey(args.seed), cfg)
+    state = init_train_state(params, opt)
+    start = 0
+
+    shardings = None
+    if mesh is not None:
+        ap = abstract_params(cfg)
+        param_sh, _ = make_param_shardings(mesh, param_axes(cfg), ap)
+        shardings = TrainState(params=param_sh,
+                               opt=type(state.opt)(
+                                   step=None, m=param_sh, v=param_sh),
+                               residual=None)
+        state = jax.device_put(state, shardings)
+
+    if (args.resume or resume_signal is not None) and args.ckpt_dir:
+        last = latest_step(args.ckpt_dir)
+        if last is not None:
+            tgt = jax.eval_shape(lambda: state)
+            state, meta = restore_checkpoint(args.ckpt_dir, last, tgt,
+                                             shardings)
+            start = last
+            print(f"[train] resumed from step {last}")
+
+    jit_step = jax.jit(step_fn, donate_argnums=0)
+    det = StragglerDetector(z_threshold=args.z_threshold)
+    fcfg = FaultConfig(fail_at_steps=tuple(args.fail_at),
+                       straggle_at_steps=tuple(args.straggle_at))
+    pending_save = None
+    for i in range(start, args.steps):
+        t0 = time.time()
+        simulate_failures(i, fcfg)
+        batch = ds.batch_at(i)
+        state, metrics = jit_step(state, batch)
+        if i % args.log_every == 0:
+            print(f"[train] step {i} loss {float(metrics['loss']):.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f}")
+        dt = time.time() - t0
+        if det.observe(i, dt):
+            print(f"[train] STRAGGLER step {i}: {dt*1e3:.0f} ms")
+        if args.ckpt_dir and args.ckpt_every and (i + 1) % args.ckpt_every == 0:
+            if pending_save is not None:
+                pending_save.join()
+            pending_save = save_checkpoint(
+                args.ckpt_dir, i + 1, state,
+                metadata={"arch": args.arch, "loss": float(metrics["loss"])},
+                async_save=True)
+    if pending_save is not None:
+        pending_save.join()
+    if det.flagged:
+        print(f"[train] stragglers flagged: {[s for s, _, _ in det.flagged]}")
+    return args.steps
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-14b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--warmup", type=int, default=10)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--data", type=int, default=1)
+    ap.add_argument("--model", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--fail-at", type=int, nargs="*", default=[])
+    ap.add_argument("--straggle-at", type=int, nargs="*", default=[])
+    ap.add_argument("--z-threshold", type=float, default=3.0)
+    ap.add_argument("--max-restarts", type=int, default=3)
+    args = ap.parse_args()
+
+    if args.fail_at:
+        fail_seq = [tuple(args.fail_at)]
+
+        def attempt(resume):
+            # after the first failure the injection list is cleared
+            if resume is not None:
+                args.fail_at = []
+                args.resume = True
+            return run(args, resume)
+
+        final = run_with_recovery(attempt, max_restarts=args.max_restarts)
+    else:
+        final = run(args)
+    print(f"[train] done at step {final}")
+
+
+if __name__ == "__main__":
+    main()

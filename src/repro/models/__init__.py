@@ -1,0 +1,7 @@
+from .model import (ModelConfig, abstract_params, count_params, decode_step,
+                    forward, init_cache, init_params, loss_fn, param_axes,
+                    param_specs, prefill)
+
+__all__ = ["ModelConfig", "abstract_params", "count_params", "decode_step",
+           "forward", "init_cache", "init_params", "loss_fn", "param_axes",
+           "param_specs", "prefill"]

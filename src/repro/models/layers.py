@@ -1,0 +1,411 @@
+"""Shared transformer layers: norms, RoPE, GQA attention (chunked-flash jnp
+path for dry-run/CPU + Pallas path for TPU), SwiGLU/GeGLU MLP, sort-based
+MoE.
+
+Attention implementations:
+  * "chunked" — lax.scan over kv blocks with online softmax (flash
+    semantics in pure XLA: O(S·chunk) memory, FLOPs counted by
+    cost_analysis).  Full S² score compute even under a causal mask.
+  * "banded"  — unrolled static q-block loop where each q block only
+    attends to its causal kv prefix (and/or local window): the S²/2 FLOP
+    saving the Pallas kernel gets from block culling, expressed in XLA.
+    Larger HLO; used as a perf-iteration variant.
+  * "pallas"  — the flash_attention kernel (TPU runs).
+All three share semantics with kernels/flash_attention/ref.py.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.act import shard_act
+
+from .param import Param, bias_param, dense_param, scale_param
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+def rms_norm_init(d):
+    return {"scale": scale_param(d, "embed")}
+
+
+def rms_norm(p, x, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"]).astype(x.dtype)
+
+
+def layer_norm_init(d):
+    return {"scale": scale_param(d, "embed"), "bias": bias_param(d, "embed")}
+
+
+def layer_norm(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+def rope(x, positions, theta=1e4):
+    """x: [..., S, n_heads, d_head]; positions: [..., S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(theta) * jnp.arange(0, half, dtype=jnp.float32)
+                    / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs      # [..., S, half]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Attention
+# --------------------------------------------------------------------------
+
+def attention_init(key, d_model, n_heads, n_kv_heads, d_head, qkv_bias=False):
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_param(ks[0], d_model, n_heads * d_head, "embed", "heads"),
+        "wk": dense_param(ks[1], d_model, n_kv_heads * d_head, "embed",
+                          "kv_heads"),
+        "wv": dense_param(ks[2], d_model, n_kv_heads * d_head, "embed",
+                          "kv_heads"),
+        "wo": dense_param(ks[3], n_heads * d_head, d_model, "heads", "embed"),
+    }
+    if qkv_bias:
+        p["bq"] = bias_param(n_heads * d_head, "heads")
+        p["bk"] = bias_param(n_kv_heads * d_head, "kv_heads")
+        p["bv"] = bias_param(n_kv_heads * d_head, "kv_heads")
+    return p
+
+
+def _qkv(p, x, n_heads, n_kv_heads, d_head):
+    B, S, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, n_heads, d_head)
+    k = k.reshape(B, S, n_kv_heads, d_head)
+    v = v.reshape(B, S, n_kv_heads, d_head)
+    return q, k, v
+
+
+def _expand_kv(k, groups):
+    if groups == 1:
+        return k
+    return jnp.repeat(k, groups, axis=1)
+
+
+def chunked_attention(q, k, v, *, causal, window, chunk=512, q_offset=0):
+    """Online-softmax scan over kv chunks, GQA-grouped (KV is never
+    expanded to H heads).  q: [B,H,Sq,D], k/v: [B,Hkv,Skv,D] with
+    H %% Hkv == 0.  q position i attends to kv position j iff
+    j <= i+q_offset (causal) and j > i+q_offset-window-1 (window)."""
+    B, H, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    chunk = min(chunk, Skv)
+    pad = (-Skv) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nc = (Skv + pad) // chunk
+    kc = jnp.moveaxis(k.reshape(B, Hkv, nc, chunk, D), 2, 0)
+    vc = jnp.moveaxis(v.reshape(B, Hkv, nc, chunk, D), 2, 0)
+    scale = D ** -0.5
+    qg = (q.astype(jnp.float32) * scale).reshape(B, Hkv, G, Sq, D)
+    q_ids = jnp.arange(Sq) + q_offset
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kb, vb, c0 = xs
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kb.astype(jnp.float32))
+        k_ids = c0 + jnp.arange(chunk)
+        mask = k_ids[None, :] < Skv
+        if causal:
+            mask = mask & (k_ids[None, :] <= q_ids[:, None])
+        if window is not None:
+            mask = mask & (k_ids[None, :] > q_ids[:, None] - window - 1)
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p, vb.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, Hkv, G, Sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, Sq, D), jnp.float32)
+    c0s = jnp.arange(nc) * chunk
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, c0s))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, H, Sq, D).astype(q.dtype)
+
+
+def windowed_attention(q, k, v, *, window, block=1024):
+    """Sliding-window attention as a *scan over q blocks*, each attending
+    to a dynamically-sliced kv band of static size (window + block).
+
+    Exact-window FLOPs like `banded_attention`, but scan-form: HLO stays
+    O(1) in sequence length (no 32-block unroll) and the kv slice is a
+    single dynamic-slice per step instead of per-block gathers — the fix
+    for the resharding storm the unrolled form triggered on the 256-chip
+    mesh."""
+    B, H, S, D = q.shape
+    Hkv = k.shape[1]
+    G = H // Hkv
+    block = min(block, S)
+    pad_q = (-S) % block
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    nq = (S + pad_q) // block
+    band = min(S, ((window + block + block - 1) // block) * block)
+    # pad kv front (band) and back (q padding) so every slice is in range
+    k = jnp.pad(k, ((0, 0), (0, 0), (band, pad_q), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, 0), (band, pad_q), (0, 0)))
+    qb = jnp.moveaxis(q.reshape(B, H, nq, block, D), 2, 0)
+    scale = D ** -0.5
+
+    def step(_, xs):
+        qi, i = xs
+        q0 = i * block
+        k0 = q0 + block - band + band      # band ends at q-block end (+pad)
+        kb = jax.lax.dynamic_slice_in_dim(k, k0, band, axis=2)
+        vb = jax.lax.dynamic_slice_in_dim(v, k0, band, axis=2)
+        qg = (qi.astype(jnp.float32) * scale).reshape(B, Hkv, G, block, D)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kb.astype(jnp.float32))
+        q_ids = q0 + jnp.arange(block)[:, None]
+        k_ids = (q0 + block - band) + jnp.arange(band)[None, :]
+        mask = (k_ids <= q_ids) & (k_ids > q_ids - window - 1) & (k_ids >= 0)
+        mask &= k_ids < S
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vb.astype(jnp.float32))
+        return None, o.reshape(B, H, block, D)
+
+    _, ob = jax.lax.scan(step, None, (qb, jnp.arange(nq)))
+    out = jnp.moveaxis(ob, 0, 2).reshape(B, H, nq * block, D)[:, :, :S]
+    return out.astype(q.dtype)
+
+
+def banded_attention(q, k, v, *, causal, window, block=1024):
+    """Causal-prefix q-block loop: q block i only touches kv[: (i+1)*block]
+    (or its window band) — S²/2 FLOPs instead of S². Static unroll."""
+    B, H, S, D = q.shape
+    block = min(block, S)
+    nb = (S + block - 1) // block
+    outs = []
+    for i in range(nb):
+        q0, q1 = i * block, min((i + 1) * block, S)
+        qi = q[:, :, q0:q1]
+        if window is not None:
+            k0 = max(0, q0 - window)
+        else:
+            k0 = 0
+        k1 = q1 if causal else S
+        outs.append(chunked_attention(
+            qi, k[:, :, k0:k1], v[:, :, k0:k1], causal=causal, window=window,
+            chunk=block, q_offset=q0 - k0))
+    return jnp.concatenate(outs, axis=2)
+
+
+def attention_apply(p, x, cfg, *, causal=True, window=None, positions=None,
+                    impl="chunked", use_rope=True):
+    """Full-sequence (train / prefill) attention.  Returns (out, (k, v))."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, x, cfg.n_heads, cfg.n_kv_heads, cfg.d_head)
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    qh = jnp.moveaxis(q, 2, 1)     # [B, H, S, D]
+    kh = jnp.moveaxis(k, 2, 1)     # [B, Hkv, S, D] — never GQA-expanded
+    vh = jnp.moveaxis(v, 2, 1)
+    if impl == "chunked":
+        out = chunked_attention(qh, kh, vh, causal=causal, window=window)
+    elif impl == "windowed" and window is not None and causal:
+        out = windowed_attention(qh, kh, vh, window=window)
+    elif impl == "windowed":
+        out = chunked_attention(qh, kh, vh, causal=causal, window=window)
+    elif impl == "banded":
+        out = banded_attention(qh, kh, vh, causal=causal, window=window)
+    elif impl == "pallas":
+        from repro.kernels.flash_attention import flash_attention
+        out = flash_attention(qh, kh, vh, causal=causal, window=window)
+    else:
+        raise ValueError(impl)
+    out = jnp.moveaxis(out, 1, 2).reshape(B, S, cfg.n_heads * cfg.d_head)
+    return out @ p["wo"], (kh, vh)
+
+
+def attention_decode(p, x, cache_k, cache_v, pos, cfg, *, window=None,
+                     use_rope=True):
+    """One-token decode.  x: [B, 1, d]; cache_k/v: [B, Hkv, Smax, D];
+    pos: scalar OR per-slot [B] positions (continuous batching).
+    Returns (out, cache_k, cache_v)."""
+    B = x.shape[0]
+    q, k, v = _qkv(p, x, cfg.n_heads, cfg.n_kv_heads, cfg.d_head)
+    pos_b = jnp.broadcast_to(jnp.asarray(pos), (B,))
+    if use_rope:
+        q = rope(q, pos_b[:, None], cfg.rope_theta)
+        k = rope(k, pos_b[:, None], cfg.rope_theta)
+    qh = jnp.moveaxis(q, 2, 1)                        # [B, H, 1, D]
+    kh = jnp.moveaxis(k, 2, 1)                        # [B, Hkv, 1, D]
+    vh = jnp.moveaxis(v, 2, 1)
+    bidx = jnp.arange(B)
+    cache_k = cache_k.at[bidx, :, pos_b].set(kh[:, :, 0].astype(cache_k.dtype))
+    cache_v = cache_v.at[bidx, :, pos_b].set(vh[:, :, 0].astype(cache_v.dtype))
+    groups = cfg.n_heads // cfg.n_kv_heads
+    Smax = cache_k.shape[2]
+    scale = cfg.d_head ** -0.5
+    # grouped-query einsum: never materialize the G-times-repeated KV;
+    # bf16 operands with f32 accumulation (casting the cache to f32 would
+    # materialize a 2x-sized copy of the whole cache)
+    qg = (qh * scale).reshape(B, cfg.n_kv_heads, groups, cfg.d_head)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qg.astype(cache_k.dtype), cache_k,
+                   preferred_element_type=jnp.float32)
+    ids = jnp.arange(Smax)
+    mask = ids[None, :] <= pos_b[:, None]             # [B, Smax]
+    if window is not None:
+        mask = mask & (ids[None, :] > pos_b[:, None] - window - 1)
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    pw = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bhkd->bhgd", pw.astype(cache_v.dtype), cache_v,
+                     preferred_element_type=jnp.float32)
+    out = out.astype(x.dtype).reshape(B, 1, cfg.n_heads * cfg.d_head)
+    return out @ p["wo"], cache_k, cache_v
+
+
+# --------------------------------------------------------------------------
+# MLP (SwiGLU / GeGLU / GELU)
+# --------------------------------------------------------------------------
+
+def mlp_init(key, d_model, d_ff, gated=True):
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_param(ks[0], d_model, d_ff, "embed", "mlp"),
+         "w_down": dense_param(ks[1], d_ff, d_model, "mlp", "embed")}
+    if gated:
+        p["w_gate"] = dense_param(ks[2], d_model, d_ff, "embed", "mlp")
+    return p
+
+
+def mlp_apply(p, x, act="silu"):
+    up = x @ p["w_up"]
+    if "w_gate" in p:
+        gate = x @ p["w_gate"]
+        h = (jax.nn.silu(gate) if act == "silu" else jax.nn.gelu(gate)) * up
+    else:
+        h = jax.nn.gelu(up) if act == "gelu" else jax.nn.silu(up)
+    return h @ p["w_down"]
+
+
+# --------------------------------------------------------------------------
+# MoE (sort-based dispatch, capacity-bounded — Switch/MegaBlocks style)
+# --------------------------------------------------------------------------
+
+def moe_init(key, d_model, d_ff, n_experts, gated=True, shared_expert=False):
+    ks = jax.random.split(key, 5)
+    sc = 1.0 / jnp.sqrt(d_model)
+
+    def ew(k, a, b, in_ax, out_ax):
+        w = jax.random.normal(k, (n_experts, a, b), jnp.float32) * sc
+        return Param(w, ("experts", in_ax, out_ax))
+
+    p = {"router": dense_param(ks[0], d_model, n_experts, "embed", None),
+         "w_up": ew(ks[1], d_model, d_ff, "embed", "mlp"),
+         "w_down": ew(ks[2], d_ff, d_model, "mlp", "embed")}
+    if gated:
+        p["w_gate"] = ew(ks[3], d_model, d_ff, "embed", "mlp")
+    if shared_expert:
+        p["shared"] = mlp_init(ks[4], d_model, d_ff, gated=gated)
+    return p
+
+
+def moe_apply(p, x, *, top_k, capacity_factor=1.25, act="gelu"):
+    """x: [B, S, d].  Per-example sort-based dispatch into [B, E, C, d]
+    expert buffers (group-limited capacity, group = one example row).
+
+    Grouping the dispatch by example keeps every argsort/scatter local to
+    the data shard that owns the example — a single global dispatch is
+    unpartitionable for GSPMD and was observed to replicate 20 GiB expert
+    buffers per device.  Per-group capacity is the standard Switch/GShard
+    formulation.
+
+    Returns (out, aux_loss).
+    """
+    B, S, d = x.shape
+    E = p["w_up"].shape[0]
+    logits = x @ p["router"]                              # [B, S, E]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
+    gate_vals, choices = jax.lax.top_k(probs, top_k)      # [B, S, k]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    C = int(capacity_factor * S * top_k / E)
+    C = max(8, ((C + 7) // 8) * 8)
+
+    def dispatch_one(xe, ce, ge):
+        """xe: [S, d]; ce/ge: [S, k] -> buffers + combine metadata."""
+        flat_e = ce.reshape(-1)                           # [S*k]
+        flat_t = jnp.repeat(jnp.arange(S), top_k)
+        flat_g = ge.reshape(-1)
+        order = jnp.argsort(flat_e)
+        e_s, t_s, g_s = flat_e[order], flat_t[order], flat_g[order]
+        idx = jnp.arange(S * top_k)
+        first = jnp.searchsorted(e_s, jnp.arange(E))
+        rank = idx - first[e_s]
+        keep = rank < C
+        slot = e_s * C + jnp.minimum(rank, C - 1)
+        buf = jnp.zeros((E * C, d), xe.dtype)
+        buf = buf.at[jnp.where(keep, slot, E * C - 1)].add(
+            jnp.where(keep[:, None], xe[t_s], 0.0))
+        return buf.reshape(E, C, d), (t_s, g_s, keep, slot)
+
+    buf, meta = jax.vmap(dispatch_one)(x, choices, gate_vals)
+    buf = shard_act(buf, "moe_buf")                       # [B, E, C, d]
+
+    up = jnp.einsum("becd,edf->becf", buf, p["w_up"])
+    if "w_gate" in p:
+        gate = jnp.einsum("becd,edf->becf", buf, p["w_gate"])
+        h = (jax.nn.gelu(gate) if act == "gelu" else jax.nn.silu(gate)) * up
+    else:
+        h = jax.nn.gelu(up)
+    eo = jnp.einsum("becf,efd->becd", h, p["w_down"])
+    eo = shard_act(eo, "moe_buf").reshape(B, E * C, d)
+
+    def combine_one(eo_e, t_s, g_s, keep):
+        slot_vals = eo_e * g_s[:, None].astype(eo_e.dtype)
+        contrib = jnp.where(keep[:, None], slot_vals, 0.0)
+        return jnp.zeros((S, d), eo_e.dtype).at[t_s].add(contrib)
+
+    t_s, g_s, keep, slot = meta
+    eo_g = jnp.take_along_axis(eo, slot[..., None], axis=1)
+    out = jax.vmap(combine_one)(eo_g, t_s, g_s, keep)
+
+    if "shared" in p:
+        out = out + mlp_apply(p["shared"], x.reshape(B * S, d),
+                              act=act).reshape(B, S, d)
+
+    # load-balance aux loss (Switch): E * sum_e f_e * p_e
+    me = probs.mean((0, 1))                               # [E]
+    fe = jnp.zeros(E).at[choices.reshape(-1)].add(1.0) / (B * S * top_k)
+    aux = E * jnp.sum(me * fe)
+    return out, aux

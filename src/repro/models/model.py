@@ -1,0 +1,381 @@
+"""Public model API: config, init, forward, loss, prefill/decode.
+
+One code path serves all ten assigned architectures; family-specific
+behaviour is driven entirely by ModelConfig (block_pattern, experts,
+enc-dec, modality stubs).  Params are plain pytrees of arrays; logical
+sharding axes are produced alongside by ``param_axes`` (no allocation —
+eval_shape) and mapped to mesh PartitionSpecs in repro.parallel.sharding.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.act import shard_act
+
+from .layers import (attention_decode, attention_init, attention_apply,
+                     layer_norm, layer_norm_init, mlp_apply, mlp_init,
+                     rms_norm, rms_norm_init)
+from .param import Param, is_param, split_tree, stack_layer_params
+from . import transformer as tf
+from . import rwkv6 as rw
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                       # dense|moe|hybrid|ssm|encdec|vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int = 0                   # 0 -> d_model // n_heads
+    block_pattern: tuple = ("attn",)
+    window: Optional[int] = None      # local-attention window
+    n_experts: int = 0
+    top_k: int = 0
+    shared_expert: bool = False
+    qkv_bias: bool = False
+    norm: str = "rms"                 # rms | ln
+    act: str = "silu"
+    gated_mlp: bool = True
+    use_rope: bool = True
+    rope_theta: float = 1e4
+    learned_pos: int = 0              # >0: learned absolute positions (whisper)
+    tie_embeddings: bool = False
+    # enc-dec (whisper)
+    n_enc_layers: int = 0
+    enc_seq: int = 0
+    dec_max: int = 0                  # decoder architectural max (whisper 448)
+    # vlm (llava)
+    n_patches: int = 0
+    # hybrid (recurrentgemma)
+    d_rnn: int = 0
+    # execution knobs
+    attention_impl: str = "chunked"   # chunked | banded | pallas
+    assoc_scan: bool = False          # RG-LRU: log-depth associative scan
+    remat: bool = True
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = None         # e.g. jnp.bfloat16: cast >=2D params
+                                      # for compute (fuses with FSDP gather)
+    # sub-quadratic? (drives long_500k cell eligibility)
+    subquadratic: bool = False
+
+    def __post_init__(self):
+        if self.d_head == 0:
+            object.__setattr__(self, "d_head",
+                               self.d_model // max(1, self.n_heads))
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.n_enc_layers > 0
+
+
+# --------------------------------------------------------------------------
+# Whisper-style enc-dec decoder block (self-attn + cross-attn + mlp)
+# --------------------------------------------------------------------------
+
+def _encdec_block_init(key, cfg):
+    ks = jax.random.split(key, 3)
+    ninit = rms_norm_init if cfg.norm == "rms" else layer_norm_init
+    return {
+        "norm1": ninit(cfg.d_model), "norm2": ninit(cfg.d_model),
+        "norm3": ninit(cfg.d_model),
+        "self": attention_init(ks[0], cfg.d_model, cfg.n_heads,
+                               cfg.n_kv_heads, cfg.d_head),
+        "cross": attention_init(ks[1], cfg.d_model, cfg.n_heads,
+                                cfg.n_kv_heads, cfg.d_head),
+        "ffn": mlp_init(ks[2], cfg.d_model, cfg.d_ff, gated=False),
+    }
+
+
+def _cross_kv(p, enc_out, cfg):
+    B, Se, _ = enc_out.shape
+    k = (enc_out @ p["wk"]).reshape(B, Se, cfg.n_kv_heads, cfg.d_head)
+    v = (enc_out @ p["wv"]).reshape(B, Se, cfg.n_kv_heads, cfg.d_head)
+    return jnp.moveaxis(k, 2, 1), jnp.moveaxis(v, 2, 1)   # [B, Hkv, Se, D]
+
+
+def _cross_attend(p, x, ck, cv, cfg):
+    """x: [B, Sq, d]; ck/cv: [B, Hkv, Se, D] precomputed encoder kv."""
+    B, Sq, _ = x.shape
+    q = (x @ p["wq"]).reshape(B, Sq, cfg.n_heads, cfg.d_head)
+    if "bq" in p:
+        q = q + p["bq"].reshape(cfg.n_heads, cfg.d_head)
+    qh = jnp.moveaxis(q, 2, 1)
+    groups = cfg.n_heads // cfg.n_kv_heads
+    kx = jnp.repeat(ck, groups, axis=1) if groups > 1 else ck
+    vx = jnp.repeat(cv, groups, axis=1) if groups > 1 else cv
+    s = jnp.einsum("bhqd,bhkd->bhqk", qh.astype(jnp.float32)
+                   * cfg.d_head ** -0.5, kx.astype(jnp.float32))
+    pw = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", pw, vx.astype(jnp.float32))
+    o = jnp.moveaxis(o.astype(x.dtype), 1, 2).reshape(
+        B, Sq, cfg.n_heads * cfg.d_head)
+    return o @ p["wo"]
+
+
+def _encdec_block_apply(p, x, enc_kv, cfg, *, pos=None, cache=None,
+                        max_len=None):
+    """Train (pos None, full seq) or decode (pos given).  With ``max_len``
+    the full-seq path also returns the padded self-attn kv cache."""
+    norm = rms_norm if cfg.norm == "rms" else layer_norm
+    h = norm(p["norm1"], x)
+    if pos is None:
+        m, (kh, vh) = attention_apply(p["self"], h, cfg, causal=True,
+                                      impl=cfg.attention_impl,
+                                      use_rope=cfg.use_rope)
+        if max_len is not None:
+            cache = {"k": tf._pad_kv(kh, max_len),
+                     "v": tf._pad_kv(vh, max_len)}
+    else:
+        m, ck, cv = attention_decode(p["self"], h, cache["k"], cache["v"],
+                                     pos, cfg, use_rope=cfg.use_rope)
+        cache = dict(cache, k=ck, v=cv)
+    x = x + m
+    h = norm(p["norm2"], x)
+    x = x + _cross_attend(p["cross"], h, enc_kv[0], enc_kv[1], cfg)
+    h = norm(p["norm3"], x)
+    x = x + mlp_apply(p["ffn"], h, act="gelu")
+    return x, cache
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 8)
+    dt = cfg.param_dtype
+    sc = 0.02
+    p: dict = {}
+    p["embed"] = Param(jax.random.normal(ks[0], (cfg.vocab, cfg.d_model),
+                                         dt) * sc, ("vocab", "embed"))
+    if not cfg.tie_embeddings:
+        p["lm_head"] = Param(jax.random.normal(
+            ks[1], (cfg.d_model, cfg.vocab), dt) * sc, ("embed", "vocab"))
+    ninit = rms_norm_init if cfg.norm == "rms" else layer_norm_init
+    p["final_norm"] = ninit(cfg.d_model)
+
+    if cfg.is_encdec:
+        enc_cfg = cfg
+        p["enc_pos"] = Param(jax.random.normal(
+            ks[2], (cfg.enc_seq, cfg.d_model), dt) * sc, (None, "embed"))
+        p["dec_pos"] = Param(jax.random.normal(
+            ks[3], (cfg.dec_max, cfg.d_model), dt) * sc, (None, "embed"))
+        enc_keys = jax.random.split(ks[4], cfg.n_enc_layers)
+        p["encoder"] = stack_layer_params(
+            [tf.block_init(k, "attn", enc_cfg) for k in enc_keys])
+        dec_keys = jax.random.split(ks[5], cfg.n_layers)
+        p["decoder"] = stack_layer_params(
+            [_encdec_block_init(k, cfg) for k in dec_keys])
+        p["enc_norm"] = ninit(cfg.d_model)
+    else:
+        p["stack"] = tf.stack_init(ks[6], cfg)
+    if cfg.learned_pos and not cfg.is_encdec:
+        p["pos"] = Param(jax.random.normal(
+            ks[7], (cfg.learned_pos, cfg.d_model), dt) * sc, (None, "embed"))
+    return p
+
+
+def init_params(key, cfg: ModelConfig):
+    vals, _ = split_tree(_init(key, cfg))
+    return vals
+
+
+def param_axes(cfg: ModelConfig):
+    tree = jax.eval_shape(functools.partial(_init, cfg=cfg),
+                          jax.random.PRNGKey(0))
+    _, axes = split_tree(tree)
+    return axes
+
+
+def abstract_params(cfg: ModelConfig):
+    tree = jax.eval_shape(functools.partial(_init, cfg=cfg),
+                          jax.random.PRNGKey(0))
+    vals, _ = split_tree(tree)
+    return vals
+
+
+def param_specs(cfg: ModelConfig):
+    """(abstract values, logical axes) — for the dry-run."""
+    return abstract_params(cfg), param_axes(cfg)
+
+
+def count_params(cfg: ModelConfig) -> int:
+    import math
+    vals = abstract_params(cfg)
+    return sum(math.prod(v.shape) for v in jax.tree.leaves(vals))
+
+
+# --------------------------------------------------------------------------
+# forward / loss
+# --------------------------------------------------------------------------
+
+def _embed_inputs(params, batch, cfg):
+    """Token (+modality-stub) embedding.  Returns [B, S, d]."""
+    emb = params["embed"]
+    x = emb[batch["tokens"]]
+    if cfg.n_patches and "patches" in batch:
+        x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+    if cfg.learned_pos and "pos" in params and not cfg.is_encdec:
+        S = x.shape[1]
+        x = x + params["pos"][:S]
+    return x
+
+
+def cast_for_compute(params, cfg: ModelConfig):
+    """bf16-cast matrices for compute while fp32 masters live in the
+    optimizer.  Casting *before* the FSDP all-gather halves the gather
+    traffic (XLA fuses the convert into the collective)."""
+    cd = cfg.compute_dtype
+    if cd is None:
+        return params
+    return jax.tree.map(
+        lambda p: p.astype(cd) if (hasattr(p, "ndim") and p.ndim >= 2)
+        else p, params)
+
+
+def forward(params, batch, cfg: ModelConfig):
+    """Returns (logits [B, S, vocab], aux_loss)."""
+    params = cast_for_compute(params, cfg)
+    if cfg.is_encdec:
+        frames = batch["frames"]                  # [B, enc_seq, d] stub
+        enc = frames.astype(cfg.param_dtype) + params["enc_pos"][None]
+
+        def enc_body(h, lp):
+            h, _, _ = tf.block_apply(lp, "attn", h, cfg, causal=False,
+                                     impl=cfg.attention_impl)
+            return h, None
+        enc_body = jax.checkpoint(enc_body) if cfg.remat else enc_body
+        enc, _ = jax.lax.scan(enc_body, enc, params["encoder"])
+        enc = (rms_norm if cfg.norm == "rms" else layer_norm)(
+            params["enc_norm"], enc)
+
+        x = params["embed"][batch["tokens"]]
+        x = x + params["dec_pos"][:x.shape[1]][None]
+
+        def dec_body(h, lp):
+            kv = _cross_kv(lp["cross"], enc, cfg)
+            h, _ = _encdec_block_apply(lp, h, kv, cfg)
+            return h, None
+        dec_body = jax.checkpoint(dec_body) if cfg.remat else dec_body
+        x, _ = jax.lax.scan(dec_body, x, params["decoder"])
+        aux = jnp.float32(0.0)
+    else:
+        x = shard_act(_embed_inputs(params, batch, cfg), "residual")
+        x, aux = tf.stack_apply(params["stack"], x, cfg, causal=True)
+
+    x = (rms_norm if cfg.norm == "rms" else layer_norm)(
+        params["final_norm"], x)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = shard_act(x @ head, "logits")
+    return logits, aux
+
+
+def loss_fn(params, batch, cfg: ModelConfig, aux_weight=0.01):
+    """Next-token cross entropy (+ MoE aux).  batch["labels"]: [B, S]."""
+    logits, aux = forward(params, batch, cfg)
+    labels = batch["labels"]
+    if cfg.n_patches and "patches" in batch:
+        # patch positions carry no label loss
+        logits = logits[:, cfg.n_patches:]
+    V = logits.shape[-1]
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        logits.astype(jnp.float32), labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = ((lse - gold) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    del V
+    return nll + aux_weight * aux
+
+
+# --------------------------------------------------------------------------
+# serving: prefill + decode
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int,
+               dtype=jnp.float32):
+    if cfg.is_encdec:
+        dec_max = cfg.dec_max
+        self_kv = {"k": jnp.zeros((cfg.n_layers, batch_size, cfg.n_kv_heads,
+                                   dec_max, cfg.d_head), dtype),
+                   "v": jnp.zeros((cfg.n_layers, batch_size, cfg.n_kv_heads,
+                                   dec_max, cfg.d_head), dtype)}
+        cross_kv = {"k": jnp.zeros((cfg.n_layers, batch_size, cfg.n_kv_heads,
+                                    cfg.enc_seq, cfg.d_head), dtype),
+                    "v": jnp.zeros((cfg.n_layers, batch_size, cfg.n_kv_heads,
+                                    cfg.enc_seq, cfg.d_head), dtype)}
+        return {"self": self_kv, "cross": cross_kv}
+    return tf.stack_cache_init(cfg, batch_size, max_len, dtype)
+
+
+def prefill(params, batch, cfg: ModelConfig, max_len: int):
+    """Returns (last-token logits, cache)."""
+    params = cast_for_compute(params, cfg)
+    if cfg.is_encdec:
+        frames = batch["frames"]
+        enc = frames.astype(cfg.param_dtype) + params["enc_pos"][None]
+
+        def enc_body(h, lp):
+            h, _, _ = tf.block_apply(lp, "attn", h, cfg, causal=False,
+                                     impl=cfg.attention_impl)
+            return h, None
+        enc, _ = jax.lax.scan(enc_body, enc, params["encoder"])
+        enc = (rms_norm if cfg.norm == "rms" else layer_norm)(
+            params["enc_norm"], enc)
+
+        x = params["embed"][batch["tokens"]]
+        S = x.shape[1]
+        x = x + params["dec_pos"][:S][None]
+
+        def dec_body(h, lp):
+            kv = _cross_kv(lp["cross"], enc, cfg)
+            h, sc = _encdec_block_apply(lp, h, kv, cfg, max_len=cfg.dec_max)
+            return h, {"self": sc, "cross": {"k": kv[0], "v": kv[1]}}
+        x, kvs = jax.lax.scan(dec_body, x, params["decoder"])
+        cache = {"self": kvs["self"], "cross": kvs["cross"]}
+    else:
+        x = shard_act(_embed_inputs(params, batch, cfg), "residual")
+        x, cache = tf.stack_prefill(params["stack"], x, cfg, max_len,
+                                    causal=True)
+    x = (rms_norm if cfg.norm == "rms" else layer_norm)(
+        params["final_norm"], x[:, -1:])
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    return (x @ head)[:, 0], cache
+
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig):
+    """tokens: [B] int32; pos: scalar or per-slot [B] int32 write position.
+    Returns (logits [B, vocab], new cache)."""
+    params = cast_for_compute(params, cfg)
+    B = tokens.shape[0]
+    x = params["embed"][tokens][:, None]           # [B, 1, d]
+    if cfg.is_encdec:
+        pe = jnp.take(params["dec_pos"], jnp.broadcast_to(pos, (B,)), axis=0)
+        x = x + pe[:, None]
+
+        def body(h, xs):
+            lp, sc, cc = xs
+            h, new_sc = _encdec_block_apply(
+                lp, h, (cc["k"], cc["v"]), cfg, pos=pos, cache=sc)
+            return h, new_sc
+        x, new_self = jax.lax.scan(
+            body, x, (params["decoder"], cache["self"], cache["cross"]))
+        new_cache = {"self": new_self, "cross": cache["cross"]}
+    else:
+        if cfg.learned_pos and "pos" in params:
+            pe = jnp.take(params["pos"], jnp.broadcast_to(pos, (B,)), axis=0)
+            x = x + pe[:, None]
+        x, new_cache = tf.stack_decode(params["stack"], cache, x, cfg, pos)
+    x = (rms_norm if cfg.norm == "rms" else layer_norm)(
+        params["final_norm"], x)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    return (x @ head)[:, 0], new_cache

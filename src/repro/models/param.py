@@ -1,0 +1,71 @@
+"""Parameter trees with logical sharding axes.
+
+Leaves are plain jnp arrays; a parallel tree of *logical axis name tuples*
+is built at init time and translated to mesh PartitionSpecs by
+:mod:`repro.parallel.sharding`.  Logical names used across the stack:
+
+  "embed"    — d_model            (usually replicated / FSDP over data)
+  "heads"    — attention head dim (tensor-parallel over model)
+  "kv_heads" — kv head dim
+  "mlp"      — d_ff               (tensor-parallel over model)
+  "vocab"    — vocabulary         (tensor-parallel over model)
+  "experts"  — MoE expert dim     (expert-parallel over model)
+  "layers"   — stacked-scan layer dim (never sharded)
+  None       — replicated
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class Param:
+    value: Any           # jnp array (or ShapeDtypeStruct in abstract init)
+    axes: tuple          # logical axis names, len == ndim
+
+
+jax.tree_util.register_pytree_node(
+    Param,
+    lambda p: ((p.value,), p.axes),
+    lambda axes, kids: Param(kids[0], axes),
+)
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def split_tree(tree):
+    """tree of Param -> (values tree, axes tree)."""
+    vals = jax.tree.map(lambda p: p.value, tree, is_leaf=is_param)
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=is_param)
+    return vals, axes
+
+
+def dense_param(key, in_dim, out_dim, in_ax, out_ax, dtype=jnp.float32,
+                scale=None):
+    scale = (1.0 / jnp.sqrt(in_dim)) if scale is None else scale
+    w = jax.random.normal(key, (in_dim, out_dim), dtype) * scale
+    return Param(w, (in_ax, out_ax))
+
+
+def bias_param(dim, ax, dtype=jnp.float32):
+    return Param(jnp.zeros((dim,), dtype), (ax,))
+
+
+def scale_param(dim, ax, dtype=jnp.float32):
+    return Param(jnp.ones((dim,), dtype), (ax,))
+
+
+def stack_layer_params(per_layer: list):
+    """List of identical Param trees -> one tree stacked on a new leading
+    "layers" axis (for lax.scan over layers)."""
+    def stack(*leaves):
+        vals = jnp.stack([l.value for l in leaves])
+        return Param(vals, ("layers",) + leaves[0].axes)
+    return jax.tree.map(stack, *per_layer, is_leaf=is_param)

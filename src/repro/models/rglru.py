@@ -1,0 +1,132 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block: x -> {a = conv1d(W_x x), b = gelu(W_y x)} -> RG-LRU(a) ⊙ b -> W_o.
+RG-LRU:  r_t = σ(W_r a_t),  i_t = σ(W_i a_t),
+         α_t = exp(-c · softplus(Λ) · r_t)          (c = 8)
+         h_t = α_t ⊙ h_{t-1} + sqrt(1 - α_t²) ⊙ (i_t ⊙ a_t)
+
+Train path scans over time; decode carries (h, conv tail) — O(1) state per
+token, which is what makes the long_500k cell runnable for this arch.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.act import shard_act
+
+from .param import Param, bias_param, dense_param
+
+CONV_W = 4
+C_LRU = 8.0
+
+
+def rglru_init(key, d_model, d_rnn):
+    ks = jax.random.split(key, 6)
+    lam = jnp.log(jnp.expm1(  # softplus^-1 so alpha in ~(0.9, 0.999)
+        -jnp.log(jnp.linspace(0.9, 0.999, d_rnn)) / C_LRU))
+    return {
+        "w_x": dense_param(ks[0], d_model, d_rnn, "embed", "mlp"),
+        "w_y": dense_param(ks[1], d_model, d_rnn, "embed", "mlp"),
+        "conv": Param(jax.random.normal(ks[2], (CONV_W, d_rnn)) * 0.1,
+                      (None, "mlp")),
+        "w_r": dense_param(ks[3], d_rnn, d_rnn, "mlp", None),
+        "w_i": dense_param(ks[4], d_rnn, d_rnn, "mlp", None),
+        "lam": Param(lam, ("mlp",)),
+        "w_o": dense_param(ks[5], d_rnn, d_model, "mlp", "embed"),
+    }
+
+
+def _lru_coeffs(p, a):
+    """fp32 recurrence coefficients (Griffin runs the RG-LRU in fp32 for
+    stability regardless of the activation dtype)."""
+    a32 = a.astype(jnp.float32)
+    r = jax.nn.sigmoid(a32 @ p["w_r"].astype(jnp.float32))
+    i = jax.nn.sigmoid(a32 @ p["w_i"].astype(jnp.float32))
+    log_alpha = -C_LRU * jax.nn.softplus(p["lam"]) * r
+    alpha = jnp.exp(log_alpha)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_alpha), 1e-12))
+    return alpha, beta * i * a32
+
+
+def rglru_apply(p, x, h0=None, assoc=False):
+    """x: [B, S, d].  Returns (out [B, S, d], (h_last, a_tail)) where
+    a_tail = last CONV_W-1 pre-conv inputs (the decode conv window).
+
+    assoc=True: the linear recurrence h_t = a_t*h + b_t runs as a
+    log-depth associative scan over time — sequence-shardable (the carries
+    exchanged between shards are [B, d_rnn], not [B, S, d_rnn]), the §Perf
+    variant for the collective-bound prefill cells."""
+    B, S, _ = x.shape
+    a_in = x @ p["w_x"]
+    b = jax.nn.gelu(x @ p["w_y"])
+    # sequence sharding hook (no-op unless the launcher installs a policy)
+    a_in = shard_act(a_in, "rglru_branch")
+    b = shard_act(b, "rglru_branch")
+    # depthwise causal conv, width 4
+    a_pad = jnp.pad(a_in, ((0, 0), (CONV_W - 1, 0), (0, 0)))
+    a = sum(a_pad[:, i:i + S] * p["conv"][i] for i in range(CONV_W))
+    alpha, drive = _lru_coeffs(p, a)
+
+    if assoc:
+        def combine(l, r):
+            (al, bl), (ar, br) = l, r
+            return al * ar, ar * bl + br
+
+        if h0 is not None:
+            drive = drive.at[:, 0].add(alpha[:, 0] * h0.astype(jnp.float32))
+        _, hs = jax.lax.associative_scan(combine, (alpha, drive), axis=1)
+        h = shard_act(hs.astype(x.dtype), "rglru_branch")
+        a_tail = a_pad[:, S:S + CONV_W - 1]
+        return (h * b) @ p["w_o"], (hs[:, -1].astype(x.dtype), a_tail)
+
+    def chunk_step(h, xs):
+        al, dr = xs                      # [C, B, d_rnn] chunks
+
+        def step(hh, ys):
+            a1, d1 = ys
+            hh = a1 * hh + d1
+            return hh, hh
+
+        h, hs = jax.lax.scan(step, h, (al, dr))
+        return h, hs
+
+    d_rnn = a.shape[-1]
+    h0 = (jnp.zeros((B, d_rnn), jnp.float32) if h0 is None
+          else h0.astype(jnp.float32))
+    # chunked scan-of-remat: backward saves one state per chunk instead of
+    # one per timestep (S x [B, d_rnn] fp32 would dominate training memory)
+    C = min(64, S)
+    pad_t = (-S) % C
+    at = jnp.moveaxis(alpha, 1, 0)
+    dt_ = jnp.moveaxis(drive, 1, 0)
+    if pad_t:
+        at = jnp.concatenate([at, jnp.ones((pad_t, B, d_rnn), at.dtype)])
+        dt_ = jnp.concatenate([dt_, jnp.zeros((pad_t, B, d_rnn), dt_.dtype)])
+    nch = (S + pad_t) // C
+    at = at.reshape(nch, C, B, d_rnn)
+    dt_ = dt_.reshape(nch, C, B, d_rnn)
+    h_last, hs = jax.lax.scan(jax.checkpoint(chunk_step), h0, (at, dt_))
+    h = jnp.moveaxis(hs.reshape(nch * C, B, d_rnn)[:S], 0, 1)
+    h = h.astype(x.dtype)
+    a_tail = a_pad[:, S:S + CONV_W - 1]    # last CONV_W-1 raw inputs
+    return (h * b) @ p["w_o"], (h_last.astype(x.dtype), a_tail)
+
+
+def rglru_decode(p, x, state):
+    """x: [B, 1, d]; state = (h [B, d_rnn], conv_tail [B, CONV_W-1, d_rnn])."""
+    h, tail = state
+    a_t = (x @ p["w_x"])[:, 0]
+    b_t = jax.nn.gelu(x @ p["w_y"])[:, 0]
+    window = jnp.concatenate([tail, a_t[:, None]], axis=1)   # [B, 4, d_rnn]
+    a = (window * p["conv"][None].astype(window.dtype)).sum(1)
+    alpha, drive = _lru_coeffs(p, a)
+    h_new = alpha * h.astype(jnp.float32) + drive
+    out = ((h_new.astype(x.dtype) * b_t) @ p["w_o"])
+    return out[:, None], (h_new.astype(h.dtype), window[:, 1:])
+
+
+def rglru_init_state(batch, d_rnn, dtype=jnp.float32):
+    return (jnp.zeros((batch, d_rnn), dtype),
+            jnp.zeros((batch, CONV_W - 1, d_rnn), dtype))

@@ -1,0 +1,155 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892) — attention-free SSM with
+data-dependent per-channel decay.
+
+Time mixing (per head, head size 64):
+    S_t = diag(w_t) S_{t-1} + k_t v_tᵀ
+    y_t = (S_{t-1} + diag(u) k_t v_tᵀ)ᵀ r_t
+with w_t = exp(-exp(w0 + LoRA_w(x̃))) the data-dependent decay (the Finch
+contribution), and token-shift ddlerp mixes on every projection input.
+
+Channel mixing: r ⊙ W_v(relu(W_k x̃)²).
+
+Train path scans over time (state [B, H, 64, 64]); decode is O(1)/token —
+this is why rwkv6-7b runs the long_500k cell.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .param import Param, dense_param
+
+HEAD = 64
+LORA_R = 32
+
+
+def _lora_init(key, d, r, out=None):
+    out = d if out is None else out
+    k1, k2 = jax.random.split(key)
+    return {"a": Param(jax.random.normal(k1, (d, r)) * 0.01, ("embed", None)),
+            "b": Param(jax.random.normal(k2, (r, out)) * 0.01, (None, "embed"))}
+
+
+def _lora(p, x):
+    return jnp.tanh(x @ p["a"]) @ p["b"]
+
+
+def timemix_init(key, d):
+    ks = jax.random.split(key, 12)
+    mu = lambda i: Param(jnp.full((d,), 0.5), ("embed",))
+    return {
+        "mu_base": mu(0), "mu_w": mu(1), "mu_k": mu(2), "mu_v": mu(3),
+        "mu_r": mu(4), "mu_g": mu(5),
+        "lora_mix": _lora_init(ks[0], d, LORA_R, d * 5),
+        "w0": Param(jnp.full((d,), -6.0), ("embed",)),
+        "lora_w": _lora_init(ks[1], d, LORA_R),
+        "u": Param(jnp.zeros((d,)), ("embed",)),
+        "w_r": dense_param(ks[2], d, d, "embed", "heads"),
+        "w_k": dense_param(ks[3], d, d, "embed", "heads"),
+        "w_v": dense_param(ks[4], d, d, "embed", "heads"),
+        "w_g": dense_param(ks[5], d, d, "embed", "heads"),
+        "w_o": dense_param(ks[6], d, d, "heads", "embed"),
+        "ln_scale": Param(jnp.ones((d,)), ("embed",)),
+    }
+
+
+def _ddlerp(p, x, x_prev):
+    """Finch data-dependent token-shift: one fused LoRA producing the five
+    per-projection mix deltas."""
+    d = x.shape[-1]
+    base = x + (x_prev - x) * p["mu_base"]
+    deltas = _lora(p["lora_mix"], base).reshape(*x.shape[:-1], 5, d)
+    mixes = []
+    for i, name in enumerate(("mu_w", "mu_k", "mu_v", "mu_r", "mu_g")):
+        m = p[name] + deltas[..., i, :]
+        mixes.append(x + (x_prev - x) * m)
+    return mixes
+
+
+def _wkv_scan(r, k, v, w, u, state, chunk: int = 64):
+    """r/k/v: [B, S, H, 64]; w: [B, S, H, 64] decay in (0,1); u: [H, 64].
+    Returns (y [B, S, H, 64], state' [B, H, 64, 64]).
+
+    Chunked scan-of-remat: the naive per-step scan saves the [B,H,64,64]
+    state for every timestep in the backward pass (S x 1 MiB at 7B scale
+    — dominates training memory); checkpointing per `chunk` steps keeps
+    one state per chunk and recomputes inside."""
+    def step(S, xs):
+        rt, kt, vt, wt = xs                      # [B, H, 64] each
+        kv = kt[..., :, None] * vt[..., None, :]           # [B,H,64,64]
+        y = jnp.einsum("bhij,bhi->bhj", S + u[..., :, None] * kv, rt)
+        S = wt[..., :, None] * S + kv
+        return S, y
+
+    def chunk_step(S, xs):
+        return jax.lax.scan(step, S, xs)
+
+    B, T = r.shape[0], r.shape[1]
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    chunk = min(chunk, T)
+    pad = (-T) % chunk
+    if pad:
+        zpad = lambda t: jnp.concatenate(
+            [t, jnp.zeros((pad,) + t.shape[1:], t.dtype)])
+        r_, k_, v_ = (zpad(t) for t in xs[:3])
+        w_ = jnp.concatenate([xs[3], jnp.ones((pad,) + xs[3].shape[1:],
+                                              xs[3].dtype)])
+        xs = (r_, k_, v_, w_)
+    nch = (T + pad) // chunk
+    xs = tuple(t.reshape(nch, chunk, *t.shape[1:]) for t in xs)
+    state, ys = jax.lax.scan(jax.checkpoint(chunk_step), state, xs)
+    ys = ys.reshape(nch * chunk, *ys.shape[2:])[:T]
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+def timemix_apply(p, x, shift_state=None, wkv_state=None):
+    """x: [B, S, d].  Returns (out, (x_last, wkv_state))."""
+    B, S, d = x.shape
+    H = d // HEAD
+    if shift_state is None:
+        shift_state = jnp.zeros((B, d), x.dtype)
+    x_prev = jnp.concatenate([shift_state[:, None], x[:, :-1]], axis=1)
+    xw, xk, xv, xr, xg = _ddlerp(p, x, x_prev)
+
+    w = jnp.exp(-jnp.exp(p["w0"] + _lora(p["lora_w"], xw)))
+    r = (xr @ p["w_r"]).reshape(B, S, H, HEAD)
+    k = (xk @ p["w_k"]).reshape(B, S, H, HEAD)
+    v = (xv @ p["w_v"]).reshape(B, S, H, HEAD)
+    g = jax.nn.silu(xg @ p["w_g"])
+    wh = w.reshape(B, S, H, HEAD)
+    u = p["u"].reshape(H, HEAD)
+
+    if wkv_state is None:
+        wkv_state = jnp.zeros((B, H, HEAD, HEAD), jnp.float32)
+    y, wkv_state = _wkv_scan(r, k, v, wh, u, wkv_state)
+    y = y.reshape(B, S, d)
+    # per-head group norm
+    yh = y.reshape(B, S, H, HEAD).astype(jnp.float32)
+    yh = (yh - yh.mean(-1, keepdims=True)) * jax.lax.rsqrt(
+        yh.var(-1, keepdims=True) + 1e-5)
+    y = (yh.reshape(B, S, d) * p["ln_scale"]).astype(x.dtype)
+    out = (y * g) @ p["w_o"]
+    return out, (x[:, -1], wkv_state)
+
+
+def chanmix_init(key, d, d_ff):
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": Param(jnp.full((d,), 0.5), ("embed",)),
+        "mu_r": Param(jnp.full((d,), 0.5), ("embed",)),
+        "w_k": dense_param(ks[0], d, d_ff, "embed", "mlp"),
+        "w_v": dense_param(ks[1], d_ff, d, "mlp", "embed"),
+        "w_r": dense_param(ks[2], d, d, "embed", None),
+    }
+
+
+def chanmix_apply(p, x, shift_state=None):
+    B, S, d = x.shape
+    if shift_state is None:
+        shift_state = jnp.zeros((B, d), x.dtype)
+    x_prev = jnp.concatenate([shift_state[:, None], x[:, :-1]], axis=1)
+    xk = x + (x_prev - x) * p["mu_k"]
+    xr = x + (x_prev - x) * p["mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["w_k"]))
+    return jax.nn.sigmoid(xr @ p["w_r"]) * (k @ p["w_v"]), x[:, -1]

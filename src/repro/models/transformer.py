@@ -1,0 +1,266 @@
+"""Block assembly: heterogeneous layer patterns under a single lax.scan.
+
+An architecture declares ``block_pattern`` — a tuple of mixer kinds cycled
+over the depth, e.g. ("attn",) for dense, ("local",)*5 + ("global",) for
+gemma3, ("rglru", "rglru", "local") for recurrentgemma, ("rwkv",) for
+rwkv6.  Layers are grouped into n_repeats = L // len(pattern) scan steps
+(each step applies one full pattern instance, params stacked on a leading
+"layers" axis) plus an unrolled tail of L %% len(pattern) layers — so HLO
+size stays O(len(pattern)) regardless of depth, which keeps the 80
+dry-run compiles tractable.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.act import shard_act
+
+from . import rglru as rg
+from . import rwkv6 as rw
+from .layers import (attention_apply, attention_decode, attention_init,
+                     layer_norm, layer_norm_init, mlp_apply, mlp_init,
+                     moe_apply, moe_init, rms_norm, rms_norm_init)
+from .param import stack_layer_params
+
+
+# --------------------------------------------------------------------------
+# One block = mixer + ffn with pre-norm residuals
+# --------------------------------------------------------------------------
+
+def block_init(key, kind, cfg):
+    km, kf, kn = jax.random.split(key, 3)
+    norm_init = rms_norm_init if cfg.norm == "rms" else layer_norm_init
+    p = {"norm1": norm_init(cfg.d_model), "norm2": norm_init(cfg.d_model)}
+    if kind in ("attn", "local"):
+        p["mixer"] = attention_init(km, cfg.d_model, cfg.n_heads,
+                                    cfg.n_kv_heads, cfg.d_head, cfg.qkv_bias)
+    elif kind == "rglru":
+        p["mixer"] = rg.rglru_init(km, cfg.d_model, cfg.d_rnn)
+    elif kind == "rwkv":
+        p["mixer"] = rw.timemix_init(km, cfg.d_model)
+    else:
+        raise ValueError(kind)
+    if cfg.n_experts > 0:
+        p["ffn"] = moe_init(kf, cfg.d_model, cfg.d_ff, cfg.n_experts,
+                            gated=True, shared_expert=cfg.shared_expert)
+    elif kind == "rwkv":
+        p["ffn"] = rw.chanmix_init(kf, cfg.d_model, cfg.d_ff)
+    else:
+        p["ffn"] = mlp_init(kf, cfg.d_model, cfg.d_ff, gated=cfg.gated_mlp)
+    return p
+
+
+def _norm(cfg):
+    return rms_norm if cfg.norm == "rms" else layer_norm
+
+
+def _pad_kv(kv, max_len):
+    """[B, Hkv, S, D] -> [B, Hkv, max_len, D]."""
+    S = kv.shape[2]
+    if S == max_len:
+        return kv
+    return jnp.pad(kv, ((0, 0), (0, 0), (0, max_len - S), (0, 0)))
+
+
+def block_apply(p, kind, x, cfg, *, causal=True, impl=None, max_len=None):
+    """Full-sequence apply.  Returns (x, cache, aux_loss).
+
+    ``max_len`` (prefill): build the block's decode cache, padded to
+    max_len for attention kinds.  None (train): cache is None."""
+    norm = _norm(cfg)
+    impl = impl or cfg.attention_impl
+    aux = jnp.float32(0.0)
+    cache = None
+    x = shard_act(x, "residual")
+    h = norm(p["norm1"], x)
+    if kind in ("attn", "local"):
+        win = cfg.window if kind == "local" else None
+        m, (kh, vh) = attention_apply(p["mixer"], h, cfg, causal=causal,
+                                      window=win, impl=impl,
+                                      use_rope=cfg.use_rope)
+        if max_len is not None:
+            cache = {"k": _pad_kv(kh, max_len), "v": _pad_kv(vh, max_len)}
+    elif kind == "rglru":
+        m, (hlast, a_tail) = rg.rglru_apply(p["mixer"], h,
+                                            assoc=cfg.assoc_scan)
+        if max_len is not None:
+            cache = {"h": hlast, "tail": a_tail}
+    elif kind == "rwkv":
+        m, (shift_t, wkv) = rw.timemix_apply(p["mixer"], h)
+    else:
+        raise ValueError(kind)
+    x = x + m
+    h = norm(p["norm2"], x)
+    if cfg.n_experts > 0:
+        f, aux = moe_apply(p["ffn"], h, top_k=cfg.top_k, act=cfg.act)
+    elif kind == "rwkv":
+        f, shift_c = rw.chanmix_apply(p["ffn"], h)
+        if max_len is not None:
+            cache = {"shift_t": shift_t, "wkv": wkv, "shift_c": shift_c}
+    else:
+        f = mlp_apply(p["ffn"], h, act=cfg.act)
+    return shard_act(x + f, "residual"), cache, aux
+
+
+def block_decode(p, kind, x, cfg, cache, pos):
+    """One-token apply.  cache is the block's decode state."""
+    norm = _norm(cfg)
+    aux = jnp.float32(0.0)
+    x = shard_act(x, "residual")
+    h = norm(p["norm1"], x)
+    if kind in ("attn", "local"):
+        win = cfg.window if kind == "local" else None
+        m, ck, cv = attention_decode(p["mixer"], h, cache["k"], cache["v"],
+                                     pos, cfg, window=win,
+                                     use_rope=cfg.use_rope)
+        cache = {"k": ck, "v": cv}
+    elif kind == "rglru":
+        m, st = rg.rglru_decode(p["mixer"], h, (cache["h"], cache["tail"]))
+        cache = {"h": st[0], "tail": st[1]}
+    elif kind == "rwkv":
+        m, st = rw.timemix_apply(p["mixer"], h, cache["shift_t"],
+                                 cache["wkv"])
+        cache = dict(cache, shift_t=st[0], wkv=st[1])
+    else:
+        raise ValueError(kind)
+    x = x + m
+    h = norm(p["norm2"], x)
+    if cfg.n_experts > 0:
+        f, aux = moe_apply(p["ffn"], h, top_k=cfg.top_k, act=cfg.act)
+    elif kind == "rwkv":
+        f, sc = rw.chanmix_apply(p["ffn"], h, cache["shift_c"])
+        cache = dict(cache, shift_c=sc)
+    else:
+        f = mlp_apply(p["ffn"], h, act=cfg.act)
+    del aux
+    return x + f, cache
+
+
+def block_cache_init(kind, cfg, batch, max_len, dtype=jnp.float32):
+    if kind in ("attn", "local"):
+        shape = (batch, cfg.n_kv_heads, max_len, cfg.d_head)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if kind == "rglru":
+        return {"h": jnp.zeros((batch, cfg.d_rnn), dtype),
+                "tail": jnp.zeros((batch, rg.CONV_W - 1, cfg.d_rnn), dtype)}
+    if kind == "rwkv":
+        H = cfg.d_model // rw.HEAD
+        return {"shift_t": jnp.zeros((batch, cfg.d_model), dtype),
+                "wkv": jnp.zeros((batch, H, rw.HEAD, rw.HEAD), jnp.float32),
+                "shift_c": jnp.zeros((batch, cfg.d_model), dtype)}
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# Pattern-scan stack
+# --------------------------------------------------------------------------
+
+def stack_init(key, cfg):
+    """Returns {"scan": tuple_per_pattern_pos(stacked over repeats),
+    "tail": list of (kind, params)}."""
+    pat = cfg.block_pattern
+    n_rep, n_tail = cfg.n_layers // len(pat), cfg.n_layers % len(pat)
+    keys = jax.random.split(key, cfg.n_layers + 1)
+    scan_params = []
+    ki = 0
+    per_pos: list[list] = [[] for _ in pat]
+    for r in range(n_rep):
+        for j, kind in enumerate(pat):
+            per_pos[j].append(block_init(keys[ki], kind, cfg))
+            ki += 1
+    scan_params = tuple(stack_layer_params(pp) if n_rep else None
+                        for pp in per_pos)
+    tail = []
+    for j in range(n_tail):
+        tail.append(block_init(keys[ki], pat[j], cfg))
+        ki += 1
+    return {"scan": scan_params, "tail": tuple(tail)}
+
+
+def stack_apply(params, x, cfg, *, causal=True, impl=None):
+    """Full-sequence forward through the pattern stack.  Returns (x, aux)."""
+    pat = cfg.block_pattern
+    n_rep = cfg.n_layers // len(pat)
+
+    def body(carry, layer_params):
+        h, aux = carry
+        for j, kind in enumerate(pat):
+            h, _, a = block_apply(layer_params[j], kind, h, cfg,
+                                  causal=causal, impl=impl)
+            aux = aux + a
+        return (h, aux), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    aux = jnp.float32(0.0)
+    if n_rep:
+        (x, aux), _ = jax.lax.scan(body_fn, (x, aux), params["scan"])
+    for j, p in enumerate(params["tail"]):
+        x, _, a = block_apply(p, pat[j], x, cfg, causal=causal, impl=impl)
+        aux = aux + a
+    return x, aux
+
+
+def stack_prefill(params, x, cfg, max_len, *, causal=True, impl=None):
+    """Prefill: forward + per-layer decode caches.  Returns (x, caches)."""
+    pat = cfg.block_pattern
+    n_rep = cfg.n_layers // len(pat)
+
+    def body(h, layer_params):
+        caches = []
+        for j, kind in enumerate(pat):
+            h, ck, _ = block_apply(layer_params[j], kind, h, cfg,
+                                   causal=causal, impl=impl, max_len=max_len)
+            caches.append(ck)
+        return h, tuple(caches)
+
+    scan_caches = ()
+    if n_rep:
+        x, scan_caches = jax.lax.scan(body, x, params["scan"])
+    tail_caches = []
+    for j, p in enumerate(params["tail"]):
+        x, ck, _ = block_apply(p, pat[j], x, cfg, causal=causal, impl=impl,
+                               max_len=max_len)
+        tail_caches.append(ck)
+    return x, {"scan": scan_caches, "tail": tuple(tail_caches)}
+
+
+def stack_cache_init(cfg, batch, max_len, dtype=jnp.float32):
+    pat = cfg.block_pattern
+    n_rep, n_tail = cfg.n_layers // len(pat), cfg.n_layers % len(pat)
+    scan_caches = tuple(
+        jax.tree.map(lambda a: jnp.broadcast_to(a, (n_rep,) + a.shape),
+                     block_cache_init(kind, cfg, batch, max_len, dtype))
+        for kind in pat) if n_rep else ()
+    tail = tuple(block_cache_init(pat[j], cfg, batch, max_len, dtype)
+                 for j in range(n_tail))
+    return {"scan": scan_caches, "tail": tail}
+
+
+def stack_decode(params, caches, x, cfg, pos):
+    """One-token decode through the stack.  Returns (x, new_caches)."""
+    pat = cfg.block_pattern
+    n_rep = cfg.n_layers // len(pat)
+
+    def body(h, xs):
+        layer_params, layer_caches = xs
+        new_caches = []
+        for j, kind in enumerate(pat):
+            h, ck = block_decode(layer_params[j], kind, h, cfg,
+                                 layer_caches[j], pos)
+            new_caches.append(ck)
+        return h, tuple(new_caches)
+
+    if n_rep:
+        x, new_scan = jax.lax.scan(body, x, (params["scan"], caches["scan"]))
+    else:
+        new_scan = ()
+    new_tail = []
+    for j, p in enumerate(params["tail"]):
+        x, ck = block_decode(p, pat[j], x, cfg, caches["tail"][j], pos)
+        new_tail.append(ck)
+    return x, {"scan": new_scan, "tail": tuple(new_tail)}

@@ -1,0 +1,6 @@
+from .adamw import AdamW, cosine_schedule
+from .compress import (compress_int8, decompress_int8, compressed_psum,
+                       error_feedback_update)
+
+__all__ = ["AdamW", "cosine_schedule", "compress_int8", "decompress_int8",
+           "compressed_psum", "error_feedback_update"]

@@ -1,0 +1,82 @@
+"""AdamW with cosine schedule.  State dtypes configurable (fp32 default;
+bf16 m/v is the memory-pressure option used by the biggest configs — the
+trade-off is documented in EXPERIMENTS.md §Dry-run)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    min_frac: float = 0.1) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(1.0, warmup)
+        prog = jnp.clip((step - warmup) / jnp.maximum(1.0, total - warmup),
+                        0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac) * 0.5 *
+                         (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    state_dtype: Any = jnp.float32
+    grad_clip: float = 1.0
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, self.state_dtype)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          m=jax.tree.map(zeros, params),
+                          v=jax.tree.map(zeros, params))
+
+    def update(self, grads, state: AdamWState, params):
+        step = state.step + 1
+        lr = self.lr(step) if callable(self.lr) else self.lr
+        # global-norm clip
+        gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                          for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, self.grad_clip / jnp.maximum(gn, 1e-12))
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32) * scale
+            m_new = self.b1 * m.astype(jnp.float32) + (1 - self.b1) * g
+            v_new = self.b2 * v.astype(jnp.float32) + (1 - self.b2) * g * g
+            mh = m_new / (1 - self.b1 ** step.astype(jnp.float32))
+            vh = v_new / (1 - self.b2 ** step.astype(jnp.float32))
+            delta = mh / (jnp.sqrt(vh) + self.eps)
+            delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return (-(lr * delta)).astype(p.dtype), \
+                m_new.astype(self.state_dtype), v_new.astype(self.state_dtype)
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_m = tdef.flatten_up_to(state.m)
+        flat_v = tdef.flatten_up_to(state.v)
+        flat_p = tdef.flatten_up_to(params)
+        out = [upd(g, m, v, p)
+               for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        updates = tdef.unflatten([o[0] for o in out])
+        m = tdef.unflatten([o[1] for o in out])
+        v = tdef.unflatten([o[2] for o in out])
+        return updates, AdamWState(step=step, m=m, v=v), gn
+
+    @staticmethod
+    def apply_updates(params, updates):
+        return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params,
+                            updates)

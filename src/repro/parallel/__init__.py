@@ -1,0 +1,5 @@
+from .sharding import (ShardingRules, DEFAULT_RULES, make_param_shardings,
+                       batch_spec, logical_to_spec, solve_rules)
+
+__all__ = ["ShardingRules", "DEFAULT_RULES", "make_param_shardings",
+           "batch_spec", "logical_to_spec", "solve_rules"]

@@ -1,0 +1,63 @@
+"""Activation sharding constraints.
+
+GSPMD propagation from parameter shardings alone goes badly wrong inside
+scan-of-remat bodies (observed: involuntary full rematerialization
+replicating [B,H,S,chunk] attention tensors on the 256-way mesh).  The fix
+is the standard one: pin the residual stream / logits / attention layouts
+at block boundaries with with_sharding_constraint.
+
+The policy is process-global and set by the launcher (build_step) before
+lowering; model code calls ``shard_act(x, name)`` which is a no-op when no
+policy is installed (tests, single-device runs).
+
+Names used by the model stack:
+  residual   [B, S, D]    — batch over data axes (seq over "model" when
+                            sequence parallelism is enabled)
+  logits     [B, S, V]    — vocab over "model"
+  heads      [B, H, S, D] — attention heads over "model"
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+
+_POLICY: dict = {}
+
+
+def set_policy(policy: dict) -> None:
+    global _POLICY
+    _POLICY = dict(policy)
+
+
+def get_policy() -> dict:
+    return dict(_POLICY)
+
+
+def clear_policy() -> None:
+    global _POLICY
+    _POLICY = {}
+
+
+@contextlib.contextmanager
+def policy(p: dict):
+    old = get_policy()
+    set_policy(p)
+    try:
+        yield
+    finally:
+        set_policy(old)
+
+
+def shard_act(x, name: str):
+    spec = _POLICY.get(name)
+    if spec is None:
+        return x
+    try:
+        if len(spec) > x.ndim:
+            return x
+    except TypeError:
+        pass
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,134 @@
+"""Logical-axis -> mesh-axis sharding rules with a divisibility-aware solver.
+
+The model stack annotates every parameter dim with a logical name
+("embed", "heads", "mlp", "vocab", "experts", ...).  The solver maps those
+names to mesh axes per architecture:
+
+  * tensor-parallel names (heads/mlp/vocab/experts) go to "model";
+  * "embed" is FSDP-sharded over "data" (ZeRO-3 via GSPMD: XLA inserts the
+    per-layer all-gathers) — and over ("pod","data") in the multi-pod mesh;
+  * a dim whose size does not divide its mesh-axis extent falls back to
+    replication for that dim (GSPMD would otherwise pad); the solver
+    records every fallback so the roofline "useful FLOPs" ratio can call
+    out the waste.
+
+The same rules translate activation logical specs (batch/seq) for inputs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    rules: tuple            # ((logical_name, mesh_axis_or_tuple), ...)
+    fsdp: bool = True       # shard "embed" over the data axes
+
+    def as_dict(self):
+        return dict(self.rules)
+
+
+DEFAULT_RULES = ShardingRules(rules=(
+    ("vocab", "model"),
+    ("heads", "model"),
+    ("kv_heads", "model"),
+    ("mlp", "model"),
+    ("experts", "model"),
+    ("embed", "data"),       # FSDP; replaced by ("pod","data") when multi-pod
+    ("layers", None),
+))
+
+
+def _mesh_axes_sizes(mesh: Mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _axis_size(mesh_sizes, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return int(np.prod([mesh_sizes[a] for a in axis]))
+    return mesh_sizes[axis]
+
+
+def solve_rules(mesh: Mesh, rules: ShardingRules = DEFAULT_RULES
+                ) -> ShardingRules:
+    """Adapt the default rules to the mesh (e.g. extend FSDP over the pod
+    axis when present)."""
+    sizes = _mesh_axes_sizes(mesh)
+    out = []
+    for name, ax in rules.rules:
+        if name == "embed" and rules.fsdp:
+            ax = (("pod", "data") if "pod" in sizes else "data")
+        out.append((name, ax))
+    return ShardingRules(rules=tuple(out), fsdp=rules.fsdp)
+
+
+def logical_to_spec(axes: tuple, mesh: Mesh, rules: ShardingRules,
+                    dims: Optional[tuple] = None,
+                    fallbacks: Optional[list] = None) -> P:
+    """One param's logical axes (+ dim sizes for divisibility checks) -> P."""
+    table = rules.as_dict()
+    sizes = _mesh_axes_sizes(mesh)
+    used = set()
+    parts = []
+    for i, name in enumerate(axes):
+        ax = table.get(name)
+        if ax is None:
+            parts.append(None)
+            continue
+        key = tuple(ax) if isinstance(ax, (tuple, list)) else (ax,)
+        if any(a in used for a in key):
+            parts.append(None)          # each mesh axis used at most once
+            continue
+        n = _axis_size(sizes, ax)
+        if dims is not None and dims[i] % n != 0:
+            if fallbacks is not None:
+                fallbacks.append((name, dims[i], ax, n))
+            parts.append(None)
+            continue
+        used.update(key)
+        parts.append(ax)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def make_param_shardings(mesh: Mesh, param_axes_tree, abstract_tree,
+                         rules: Optional[ShardingRules] = None):
+    """(axes tree, abstract value tree) -> (NamedSharding tree, fallbacks)."""
+    rules = solve_rules(mesh, rules or DEFAULT_RULES)
+    fallbacks: list = []
+
+    def one(axes, aval):
+        spec = logical_to_spec(tuple(axes), mesh, rules, tuple(aval.shape),
+                               fallbacks)
+        return NamedSharding(mesh, spec)
+
+    def is_axes_leaf(x):
+        return (isinstance(x, tuple) and len(x) > 0
+                and all(isinstance(a, str) or a is None for a in x))
+
+    shardings = jax.tree.map(one, param_axes_tree, abstract_tree,
+                             is_leaf=is_axes_leaf)
+    return shardings, fallbacks
+
+
+def batch_spec(mesh: Mesh, ndim: int, batch_divisible: bool = True) -> P:
+    """Shard the leading (batch) dim over all data-parallel axes."""
+    sizes = _mesh_axes_sizes(mesh)
+    dp = tuple(a for a in ("pod", "data") if a in sizes)
+    if not dp or not batch_divisible:
+        return P(*([None] * ndim))
+    return P(dp, *([None] * (ndim - 1)))
+
+
+def data_axis_size(mesh: Mesh) -> int:
+    sizes = _mesh_axes_sizes(mesh)
+    return int(np.prod([sizes[a] for a in ("pod", "data") if a in sizes]))

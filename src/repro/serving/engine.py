@@ -1,0 +1,140 @@
+"""Batched serving engine: slot-based continuous batching over the
+prefill/decode API.
+
+A fixed pool of B decode slots shares one KV cache [.., B, .., max_len, ..].
+Incoming requests are prefilled one at a time (prefill writes the request's
+kv into its slot via a scatter) and then decoded jointly — each decode_step
+advances every live slot by one token.  Finished slots (EOS or length
+limit) are recycled.  This is the standard vLLM-style loop reduced to its
+JAX-native core: all slot state is device-resident; the host only moves
+request text in and tokens out.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode_step, init_cache, prefill
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # [S] int32
+    max_new: int = 32
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    batch_slots: int = 4
+    max_len: int = 256
+    eos_id: int = -1              # -1: never stop early
+
+
+class ServingEngine:
+    def __init__(self, params, cfg, serve_cfg: ServeConfig):
+        self.params = params
+        self.cfg = cfg
+        self.sc = serve_cfg
+        B, L = serve_cfg.batch_slots, serve_cfg.max_len
+        self.cache = init_cache(cfg, B, L)
+        self.pos = np.zeros(B, dtype=np.int64)          # per-slot write pos
+        self.live: list[Optional[Request]] = [None] * B
+        self._decode = jax.jit(
+            lambda p, c, t, pos: decode_step(p, c, t, pos, cfg))
+        self._prefill1 = jax.jit(
+            lambda p, b: prefill(p, b, cfg, L))
+
+    # -- slot management ---------------------------------------------------
+
+    def _free_slot(self) -> Optional[int]:
+        for i, r in enumerate(self.live):
+            if r is None:
+                return i
+        return None
+
+    def add_request(self, req: Request) -> bool:
+        slot = self._free_slot()
+        if slot is None:
+            return False
+        # prefill the single request, then scatter its cache into the slot
+        batch = {"tokens": jnp.asarray(req.prompt)[None]}
+        logits, rcache = self._prefill1(self.params, batch)
+        tok = int(jnp.argmax(logits[0]))
+        req.out.append(tok)
+
+        # scatter along the batch axis of every cache leaf
+        def scatter(leaf_slots, leaf_one):
+            # batch axis: first axis whose size == batch_slots and == 1 in
+            # the single-request cache at the same position
+            ax = _batch_axis(leaf_slots.shape, leaf_one.shape,
+                             self.sc.batch_slots)
+            idx = [slice(None)] * leaf_slots.ndim
+            idx[ax] = slice(slot, slot + 1)
+            return leaf_slots.at[tuple(idx)].set(leaf_one)
+
+        self.cache = jax.tree.map(scatter, self.cache, rcache)
+        self.pos[slot] = len(req.prompt)
+        self.live[slot] = req
+        return True
+
+    # -- decode ------------------------------------------------------------
+
+    def step(self):
+        """One joint decode step across all live slots."""
+        if not any(r is not None for r in self.live):
+            return
+        B = self.sc.batch_slots
+        toks = np.zeros(B, dtype=np.int32)
+        for i, r in enumerate(self.live):
+            if r is not None:
+                toks[i] = r.out[-1]
+        # per-slot positions: each live slot writes kv at its own pos
+        pos = jnp.asarray(self.pos.astype(np.int32))
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          jnp.asarray(toks), pos)
+        nxt = np.asarray(jnp.argmax(logits, -1))
+        for i, r in enumerate(self.live):
+            if r is None:
+                continue
+            r.out.append(int(nxt[i]))
+            self.pos[i] += 1
+            if (len(r.out) >= r.max_new or
+                    int(nxt[i]) == self.sc.eos_id or
+                    self.pos[i] >= self.sc.max_len - 1):
+                r.done = True
+                self.live[i] = None
+
+    def run(self, requests: list[Request], max_steps: int = 10_000):
+        """Serve a workload to completion; returns the finished requests."""
+        pending = list(requests)
+        done: list[Request] = []
+        steps = 0
+        while (pending or any(self.live)) and steps < max_steps:
+            while pending and self._free_slot() is not None:
+                self.add_request(pending.pop(0))
+            self.step()
+            done.extend(r for r in requests if r.done)
+            for r in done:
+                if r in requests:
+                    requests.remove(r)
+            steps += 1
+        return done
+
+
+def _batch_axis(slot_shape, one_shape, batch_slots) -> int:
+    for ax, (a, b) in enumerate(zip(slot_shape, one_shape)):
+        if a == batch_slots and b == 1:
+            return ax
+    # fall back: first axis that differs
+    for ax, (a, b) in enumerate(zip(slot_shape, one_shape)):
+        if a != b:
+            return ax
+    raise ValueError(f"no batch axis in {slot_shape} vs {one_shape}")

@@ -1,0 +1,7 @@
+from .train_step import TrainState, make_train_step
+from .checkpoint import save_checkpoint, restore_checkpoint, latest_step
+from .fault import FaultConfig, StragglerDetector, simulate_failures
+
+__all__ = ["TrainState", "make_train_step", "save_checkpoint",
+           "restore_checkpoint", "latest_step", "FaultConfig",
+           "StragglerDetector", "simulate_failures"]

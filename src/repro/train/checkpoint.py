@@ -1,0 +1,101 @@
+"""Sharded npz checkpointing with elastic restore.
+
+Layout: <dir>/step_<N>/
+  manifest.json            — flat-key -> {shape, dtype}, plus user metadata
+  arrays.npz               — one entry per flattened pytree leaf
+
+Restore never assumes the saving mesh: leaves are loaded on host and
+device_put with the *destination* sharding, so a job restarted on a
+different topology (elastic downscale: 2 pods -> 1 pod) resharding is a
+single device_put per leaf.  Saves are atomic (tmpdir + rename) so a crash
+mid-save never corrupts the latest complete step, and can run on a
+background thread (async=True) to overlap with training.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(p) for p in path)
+        out[key] = leaf
+    return out
+
+
+def save_checkpoint(directory: str, step: int, tree, metadata: dict | None
+                    = None, async_save: bool = False):
+    """Blocking by default; async_save spawns a daemon thread after the
+    host transfer (device->host copy happens synchronously so the saved
+    state is the state at call time)."""
+    flat = _flatten_with_paths(tree)
+    host = {k: np.asarray(v) for k, v in flat.items()}
+
+    def write():
+        tmp = os.path.join(directory, f".tmp_step_{step}")
+        final = os.path.join(directory, f"step_{step}")
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "arrays.npz"), **host)
+        manifest = {
+            "step": step,
+            "keys": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                     for k, v in host.items()},
+            "metadata": metadata or {},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+
+    if async_save:
+        t = threading.Thread(target=write, daemon=True)
+        t.start()
+        return t
+    write()
+    return None
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for d in os.listdir(directory)
+             if (m := re.fullmatch(r"step_(\d+)", d))]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, step: int, target_tree,
+                       shardings=None):
+    """target_tree: pytree with the same structure (values or
+    ShapeDtypeStructs).  shardings: optional matching tree of NamedSharding
+    — the elastic-reshard path (device_put onto the *current* mesh)."""
+    path = os.path.join(directory, f"step_{step}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    z = np.load(os.path.join(path, "arrays.npz"))
+    flat_target, treedef = jax.tree_util.tree_flatten_with_path(target_tree)
+    flat_shardings = (jax.tree_util.tree_leaves(shardings)
+                      if shardings is not None else [None] * len(flat_target))
+    leaves = []
+    for (p, tgt), shd in zip(flat_target, flat_shardings):
+        key = "/".join(str(q) for q in p)
+        arr = z[key]
+        if tuple(arr.shape) != tuple(tgt.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"ckpt {arr.shape} vs target {tgt.shape}")
+        leaves.append(jax.device_put(arr, shd) if shd is not None
+                      else jax.numpy.asarray(arr))
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(target_tree), leaves)
+    return tree, manifest["metadata"]

@@ -1,0 +1,90 @@
+"""Train-step builder: value_and_grad + microbatched gradient accumulation
++ AdamW, with optional int8 error-feedback gradient compression on the pod
+(DCN) boundary.
+
+Microbatching is the activation-memory lever at scale: the global batch is
+split into M microbatches scanned sequentially with gradient accumulation,
+so live activation memory is 1/M of the full-batch remat footprint (stored
+scan residuals: L x B/M x S x d_model).  M is a per-(arch x shape) config
+surfaced to the dry-run and the §Perf log.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import loss_fn
+from repro.optim import AdamW, error_feedback_update
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any
+    residual: Any      # error-feedback residuals (None when compression off)
+
+
+def init_train_state(params, optimizer: AdamW, compress: bool = False
+                     ) -> TrainState:
+    residual = (jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params) if compress else None)
+    return TrainState(params=params, opt=optimizer.init(params),
+                      residual=residual)
+
+
+def make_train_step(cfg, optimizer: AdamW, microbatches: int = 1,
+                    compress_grads: bool = False):
+    """Returns step(state, batch) -> (state, metrics).
+
+    batch leaves: [B, ...] with B divisible by `microbatches`.
+    """
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn)(params, batch, cfg)
+
+    def step(state: TrainState, batch):
+        params = state.params
+        if microbatches == 1:
+            loss, grads = grads_of(params, batch)
+        else:
+            def reshape(x):
+                B = x.shape[0]
+                return x.reshape(microbatches, B // microbatches,
+                                 *x.shape[1:])
+            mbs = jax.tree.map(reshape, batch)
+
+            def acc_fn(carry, mb):
+                loss_acc, g_acc = carry
+                loss, g = grads_of(params, mb)
+                return (loss_acc + loss,
+                        jax.tree.map(jnp.add, g_acc, g)), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (loss, grads), _ = jax.lax.scan(acc_fn, (jnp.float32(0.0), g0),
+                                            mbs)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+
+        residual = state.residual
+        if compress_grads:
+            # two maps (XLA CSEs the duplicate work under jit) — avoids
+            # tuple-leaf trees colliding with tuple containers in params
+            new_grads = jax.tree.map(
+                lambda g, r: error_feedback_update(g, r)[0], grads, residual)
+            residual = jax.tree.map(
+                lambda g, r: error_feedback_update(g, r)[1], grads, residual)
+            grads = new_grads
+
+        updates, opt, gnorm = optimizer.update(grads, state.opt, params)
+        params = AdamW.apply_updates(params, updates)
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "lr": (optimizer.lr(opt.step) if callable(optimizer.lr)
+                          else jnp.float32(optimizer.lr))}
+        return TrainState(params=params, opt=opt, residual=residual), metrics
+
+    return step

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# tests run with the default single CPU device; only subprocess-based tests
+# (test_distributed, test_dryrun_smoke) override XLA_FLAGS in their children.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

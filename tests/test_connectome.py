@@ -1,0 +1,81 @@
+"""Connectome container + synthetic generator (paper Figs 2-3 statistics)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import synthetic_flywire, from_edges
+from repro.core.connectome import _transpose_csr
+
+
+def test_generator_statistics():
+    c = synthetic_flywire(n=5000, target_synapses=150_000, seed=0)
+    s = c.stats()
+    assert s["n_neurons"] == 5000
+    # paper: heavy-tailed degree distributions
+    assert s["max_fan_in"] > 10 * c.fan_in.mean()
+    assert s["max_fan_out"] > 10 * c.fan_out.mean()
+    # paper: majority of weights modest, mode at +-1, signed (Dale's law)
+    assert 0.2 < s["frac_w_pm1"] < 0.7
+    assert 0.1 < s["frac_inhibitory"] < 0.5
+    assert s["w_min"] < 0 < s["w_max"]
+    c.validate()
+
+
+def test_generator_weight_outlier_range():
+    c = synthetic_flywire(n=20_000, target_synapses=600_000, seed=1)
+    # outliers exist beyond the 9-bit cap (what makes SAR capping matter)
+    assert c.in_weights.max() > 255 or c.in_weights.min() < -256
+
+
+def test_from_edges_condenses_duplicates():
+    # paper: 50M raw -> 15M condensed by summing same-(pre,post) weights
+    pre = np.array([0, 0, 1, 0])
+    post = np.array([1, 1, 2, 2])
+    w = np.array([2, 3, 4, 5])
+    c = from_edges(3, pre, post, w)
+    assert c.nnz == 3
+    dense = c.dense()
+    assert dense[1, 0] == 5           # 2+3 condensed
+    assert dense[2, 1] == 4
+    assert dense[2, 0] == 5
+
+
+def test_dense_matches_csr():
+    c = synthetic_flywire(n=500, target_synapses=5_000, seed=2)
+    dense = c.dense()
+    fi = dense.astype(bool).sum(axis=1)
+    np.testing.assert_array_equal(fi, c.fan_in)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(10, 60), st.integers(20, 300), st.integers(0, 10_000))
+def test_transpose_roundtrip(n, nnz, seed):
+    """Property: in-CSR -> out-CSR -> in-CSR is the identity."""
+    rng = np.random.default_rng(seed)
+    pre = rng.integers(0, n, nnz)
+    post = rng.integers(0, n, nnz)
+    w = rng.integers(-50, 50, nnz)
+    c = from_edges(n, pre, post, w)
+    t_indptr, t_indices, t_w = _transpose_csr(
+        c.n, c.in_indptr, c.in_indices, c.in_weights)
+    b_indptr, b_indices, b_w = _transpose_csr(c.n, t_indptr, t_indices, t_w)
+    np.testing.assert_array_equal(b_indptr, c.in_indptr)
+    # within-row order may permute; compare (row, col, w) multisets
+    rows_a = np.repeat(np.arange(n), np.diff(c.in_indptr))
+    rows_b = np.repeat(np.arange(n), np.diff(b_indptr))
+    a = sorted(zip(rows_a, c.in_indices, c.in_weights))
+    b = sorted(zip(rows_b, b_indices, b_w))
+    assert a == b
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(5, 40), st.integers(1, 200), st.integers(0, 99))
+def test_from_edges_preserves_total_weight(n, nnz, seed):
+    rng = np.random.default_rng(seed)
+    pre = rng.integers(0, n, nnz)
+    post = rng.integers(0, n, nnz)
+    w = rng.integers(-9, 9, nnz)
+    c = from_edges(n, pre, post, w)
+    assert c.in_weights.sum() == w.sum()
+    assert c.out_weights.sum() == w.sum()

@@ -1,0 +1,89 @@
+"""Engine equivalence: dense / csr / ell / event / binned must agree
+(the paper's 'same network, different delivery strategy' invariant)."""
+
+import numpy as np
+import pytest
+
+from repro.core import SimConfig, simulate, synthetic_flywire
+from repro.core.engine import spike_rates_hz
+
+
+@pytest.fixture(scope="module")
+def net():
+    c = synthetic_flywire(n=1500, target_synapses=45_000, seed=3)
+    sugar = np.arange(20)
+    return c, sugar
+
+
+ENGINES = ["dense", "csr", "ell", "event", "binned"]
+
+
+@pytest.mark.parametrize("engine", ENGINES[1:])
+def test_engines_agree_exactly(net, engine):
+    """Same seed => identical RNG stream => identical spike counts."""
+    c, sugar = net
+    ref = simulate(c, SimConfig(engine="dense"), 400, sugar, seed=7)
+    out = simulate(c, SimConfig(engine=engine), 400, sugar, seed=7)
+    np.testing.assert_array_equal(np.asarray(ref.counts),
+                                  np.asarray(out.counts))
+    assert int(out.dropped) == 0
+
+
+def test_event_engine_budget_drops_are_counted(net):
+    c, sugar = net
+    cfg = SimConfig(engine="event", syn_budget=256, background_rate_hz=200.0)
+    out = simulate(c, cfg, 100, sugar, seed=0)
+    assert int(out.dropped) > 0     # deliberately starved budget
+
+
+def test_fixed_point_engine_close_to_float(net):
+    """Paper Fig 12: fixed-point hardware path tracks the float reference
+    statistically (spike-rate parity)."""
+    from repro.core import parity
+    c, sugar = net
+    T = 500
+    f = simulate(c, SimConfig(engine="csr", poisson_to_v=False), T, sugar,
+                 seed=11)
+    x = simulate(c, SimConfig(engine="csr", poisson_to_v=False,
+                              fixed_point=True), T, sugar, seed=11)
+    rf = np.asarray(spike_rates_hz(f.counts, T, 0.1))
+    rx = np.asarray(spike_rates_hz(x.counts, T, 0.1))
+    st = parity(rf, rx)
+    assert st.n_active > 0
+    # identical Poisson stream; only integration arithmetic differs
+    assert st.frac_within_1hz > 0.9 or st.rmse_hz < 2.0, st.summary()
+
+
+def test_quantization_ablation_changes_outliers_only(net):
+    """Paper Fig 13 (capped weights): quantizing to 9 bits perturbs rates
+    but keeps the network in a similar regime."""
+    c, sugar = net
+    T = 400
+    a = simulate(c, SimConfig(engine="csr"), T, sugar, seed=5)
+    b = simulate(c, SimConfig(engine="csr", quantize_bits=9), T, sugar,
+                 seed=5)
+    ca, cb = int(a.counts.sum()), int(b.counts.sum())
+    assert cb > 0
+    assert abs(ca - cb) / max(ca, 1) < 0.5
+
+
+def test_raster_collection(net):
+    c, sugar = net
+    out = simulate(c, SimConfig(engine="csr", collect_raster=True), 50,
+                   sugar, seed=0)
+    assert out.raster.shape == (50, c.n)
+    np.testing.assert_array_equal(
+        np.asarray(out.raster).sum(0), np.asarray(out.counts))
+
+
+def test_background_scaling_activity_increases(net):
+    """Scaling study substrate: higher background rate => more spikes."""
+    c, _ = net
+    counts = []
+    for rate in (0.0, 5.0, 40.0):
+        cfg = SimConfig(engine="csr", background_rate_hz=rate,
+                        poisson_rate_hz=0.0)
+        out = simulate(c, cfg, 200, None, seed=1)
+        counts.append(int(out.counts.sum()))
+    assert counts[0] == 0
+    assert counts[1] < counts[2]

@@ -1,0 +1,92 @@
+"""Fault tolerance: straggler detection, failure injection + recovery,
+elastic restore onto a different sharding layout."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data import SyntheticLM
+from repro.models import init_params
+from repro.optim import AdamW
+from repro.train import (FaultConfig, StragglerDetector, latest_step,
+                         make_train_step, restore_checkpoint,
+                         save_checkpoint, simulate_failures)
+from repro.train.fault import InjectedFailure, run_with_recovery
+from repro.train.train_step import init_train_state
+
+
+def test_straggler_detector_flags_outliers():
+    det = StragglerDetector(window=16, z_threshold=3.0)
+    rng = np.random.default_rng(0)
+    flagged = []
+    for i in range(100):
+        dt = 0.1 + rng.normal(0, 0.002)
+        if i in (50, 80):
+            dt = 0.5                      # injected straggler
+        if det.observe(i, dt):
+            flagged.append(i)
+    assert flagged == [50, 80]
+    # stragglers don't poison the baseline window
+    assert float(np.mean(det.times)) < 0.12
+
+
+def test_simulate_failures_raises():
+    cfg = FaultConfig(fail_at_steps=(3,))
+    simulate_failures(2, cfg)
+    with pytest.raises(InjectedFailure):
+        simulate_failures(3, cfg)
+
+
+def test_recovery_loop_restarts_from_checkpoint(tmp_path):
+    """End-to-end: train, crash at step 5, supervisor restarts from the
+    last checkpoint, run completes, loss trajectory continues."""
+    cfg = get_config("qwen2.5-14b", smoke=True)
+    opt = AdamW(lr=1e-3)
+    ds = SyntheticLM(vocab=cfg.vocab, seq=16, global_batch=4)
+    step_fn = jax.jit(make_train_step(cfg, opt))
+    ckpt = str(tmp_path)
+    total_steps = 10
+    attempts = []
+
+    def attempt(resume_signal):
+        attempts.append(resume_signal)
+        start = 0
+        state = init_train_state(
+            init_params(jax.random.PRNGKey(0), cfg), opt)
+        if resume_signal is not None:
+            last = latest_step(ckpt)
+            state, _ = restore_checkpoint(ckpt, last,
+                                          jax.eval_shape(lambda: state))
+            start = last
+        for i in range(start, total_steps):
+            if i == 5 and resume_signal is None:
+                raise InjectedFailure("node died")
+            state, m = step_fn(state, ds.batch_at(i))
+            if (i + 1) % 2 == 0:
+                save_checkpoint(ckpt, i + 1, state)
+        return total_steps
+
+    final = run_with_recovery(attempt, max_restarts=2)
+    assert final == total_steps
+    assert len(attempts) == 2              # one crash, one successful resume
+    assert latest_step(ckpt) == total_steps
+
+
+def test_elastic_restore_changes_layout(tmp_path):
+    """Restore is layout-agnostic: the checkpoint written from one 'mesh'
+    restores onto explicitly different device_put layouts (here: the
+    1-device degenerate case exercises the device_put path)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    cfg = get_config("qwen2.5-14b", smoke=True)
+    opt = AdamW(lr=1e-3)
+    state = init_train_state(init_params(jax.random.PRNGKey(0), cfg), opt)
+    save_checkpoint(str(tmp_path), 1, state)
+    mesh = jax.make_mesh((1,), ("data",))
+    shardings = jax.tree.map(lambda _: NamedSharding(mesh, P()), state)
+    restored, _ = restore_checkpoint(str(tmp_path), 1,
+                                     jax.eval_shape(lambda: state),
+                                     shardings)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

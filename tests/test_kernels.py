@@ -1,0 +1,158 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.neuron import LIFParams, LIFState, lif_step, lif_step_fx
+from repro.core import synthetic_flywire
+from repro.kernels.lif import lif_update, lif_update_fx
+from repro.kernels.spike_prop import (build_blocked, spike_deliver,
+                                      spike_deliver_dense_ref,
+                                      spike_deliver_ref)
+from repro.kernels.flash_attention import attention_ref, flash_attention
+
+
+# ---------------------------------------------------------------- LIF ----
+
+@pytest.mark.parametrize("n", [64, 128, 300, 1000])
+@pytest.mark.parametrize("dt", [0.1, 1.0])
+def test_lif_kernel_float_sweep(n, dt):
+    p = LIFParams(dt=dt)
+    rng = np.random.default_rng(n)
+    st = LIFState(v=jnp.asarray(rng.normal(0, 3, n), jnp.float32),
+                  g=jnp.asarray(abs(rng.normal(0, 1, n)), jnp.float32),
+                  refrac=jnp.asarray(rng.integers(0, 3, n), jnp.int32))
+    g_in = jnp.asarray(rng.normal(0, 2, n), jnp.float32)
+    v_in = jnp.asarray(rng.normal(0, 5, n), jnp.float32)
+    force = jnp.asarray(rng.random(n) < 0.05)
+    st_k, spk_k = lif_update(st, g_in, p, v_in, force)
+    st_r, spk_r = lif_step(st, g_in, p, v_in, force)
+    np.testing.assert_allclose(st_k.v, st_r.v, atol=1e-6)
+    np.testing.assert_allclose(st_k.g, st_r.g, atol=1e-6)
+    np.testing.assert_array_equal(st_k.refrac, st_r.refrac)
+    np.testing.assert_array_equal(spk_k, spk_r)
+
+
+@pytest.mark.parametrize("n", [128, 500])
+def test_lif_kernel_fixed_point_exact(n):
+    """Fixed-point path must be bit-exact (integer arithmetic)."""
+    p = LIFParams()
+    rng = np.random.default_rng(n)
+    st = LIFState(v=jnp.asarray(rng.integers(-10000, 10000, n), jnp.int32),
+                  g=jnp.asarray(rng.integers(0, 5000, n), jnp.int32),
+                  refrac=jnp.asarray(rng.integers(0, 3, n), jnp.int32))
+    g_in = jnp.asarray(rng.integers(-50, 50, n), jnp.int32)
+    v_in = jnp.asarray(rng.integers(0, 100, n), jnp.int32)
+    force = jnp.asarray(rng.random(n) < 0.05)
+    st_k, spk_k = lif_update_fx(st, g_in, p, v_in, force)
+    st_r, spk_r = lif_step_fx(st, g_in, p, v_in, force)
+    np.testing.assert_array_equal(st_k.v, st_r.v)
+    np.testing.assert_array_equal(st_k.g, st_r.g)
+    np.testing.assert_array_equal(spk_k, spk_r)
+
+
+def test_lif_kernel_multistep_trajectory():
+    p = LIFParams()
+    n = 256
+    stk = str_ = LIFState(v=jnp.zeros(n), g=jnp.zeros(n),
+                          refrac=jnp.zeros(n, jnp.int32))
+    rng = np.random.default_rng(0)
+    for _ in range(30):
+        g_in = jnp.asarray(rng.integers(0, 30, n), jnp.float32) * 0.275
+        stk, sk = lif_update(stk, g_in, p)
+        str_, sr = lif_step(str_, g_in, p)
+        np.testing.assert_allclose(stk.v, str_.v, atol=1e-4)
+        np.testing.assert_array_equal(sk, sr)
+
+
+# --------------------------------------------------------- spike_prop ----
+
+@pytest.mark.parametrize("n,nnz,rate", [(256, 5_000, 0.01), (1000, 30_000, 0.05),
+                                        (777, 10_000, 0.2), (1500, 20_000, 0.0)])
+def test_spike_prop_sweep(n, nnz, rate):
+    c = synthetic_flywire(n=n, target_synapses=nnz, seed=n)
+    bs = build_blocked(c)
+    rng = np.random.default_rng(1)
+    spk = rng.random(n) < rate
+    out = np.asarray(spike_deliver(bs, spk))
+    np.testing.assert_allclose(out, np.asarray(spike_deliver_ref(bs, spk)),
+                               atol=1e-3)
+    np.testing.assert_allclose(
+        out, np.asarray(spike_deliver_dense_ref(c, spk)), atol=1e-3)
+
+
+def test_spike_prop_quantized_weights():
+    from repro.core import quantize_weights
+    c = synthetic_flywire(n=600, target_synapses=15_000, seed=9)
+    wq = quantize_weights(c.in_weights, 9)
+    bs = build_blocked(c, quantized=wq)
+    spk = np.random.default_rng(2).random(c.n) < 0.1
+    out = np.asarray(spike_deliver(bs, spk))
+    ref = np.asarray(spike_deliver_dense_ref(c, spk, quantized=wq))
+    np.testing.assert_allclose(out, ref, atol=1e-3)
+
+
+def test_spike_prop_gating_zero_blocks():
+    """All-silent input -> all tiles gated -> exact zeros."""
+    c = synthetic_flywire(n=500, target_synapses=8_000, seed=10)
+    bs = build_blocked(c)
+    out = np.asarray(spike_deliver(bs, np.zeros(c.n, bool)))
+    assert np.abs(out).max() == 0.0
+
+
+# ---------------------------------------------------- flash attention ----
+
+@pytest.mark.parametrize("B,H,Hkv,Sq,D,causal,window", [
+    (1, 2, 2, 256, 64, True, None),
+    (2, 4, 2, 128, 64, True, None),      # GQA
+    (1, 2, 1, 200, 32, True, None),      # padding (200 % 128 != 0)
+    (1, 2, 2, 256, 64, False, None),     # bidirectional (whisper encoder)
+    (1, 2, 2, 512, 64, True, 128),       # sliding window (gemma3 local)
+    (1, 4, 4, 384, 128, True, 96),
+])
+def test_flash_attention_sweep(B, H, Hkv, Sq, D, causal, window):
+    rng = np.random.default_rng(Sq + D)
+    q = jnp.asarray(rng.normal(0, 1, (B, H, Sq, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (B, Hkv, Sq, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (B, Hkv, Sq, D)), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, window=window)
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(out, ref, atol=2e-4)
+
+
+def test_flash_attention_matches_model_chunked_and_banded():
+    """Kernel, chunked-jnp and banded-jnp paths are interchangeable."""
+    from repro.models.layers import banded_attention, chunked_attention
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(0, 1, (2, 4, 256, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (2, 2, 256, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (2, 2, 256, 64)), jnp.float32)
+    a = flash_attention(q, k, v, causal=True, window=None)
+    b = chunked_attention(q, k, v, causal=True, window=None, chunk=128)
+    c = banded_attention(q, k, v, causal=True, window=None, block=64)
+    np.testing.assert_allclose(a, b, atol=2e-4)
+    np.testing.assert_allclose(b, c, atol=2e-4)
+    # windowed variant
+    a = flash_attention(q, k, v, causal=True, window=64)
+    b = chunked_attention(q, k, v, causal=True, window=64, chunk=128)
+    c = banded_attention(q, k, v, causal=True, window=64, block=64)
+    np.testing.assert_allclose(a, b, atol=2e-4)
+    np.testing.assert_allclose(b, c, atol=2e-4)
+
+
+def test_windowed_scan_attention_matches_oracle():
+    """The scan-form sliding-window attention (§Perf variant) is exact."""
+    from repro.models.layers import chunked_attention, windowed_attention
+    rng = np.random.default_rng(3)
+    for (B, H, Hkv, S, D, W, blk) in [(1, 2, 1, 256, 32, 64, 64),
+                                      (2, 4, 2, 512, 64, 128, 128),
+                                      (1, 2, 2, 300, 32, 96, 128),
+                                      (1, 2, 1, 512, 32, 700, 128)]:
+        q = jnp.asarray(rng.normal(0, 1, (B, H, S, D)), jnp.float32)
+        k = jnp.asarray(rng.normal(0, 1, (B, Hkv, S, D)), jnp.float32)
+        v = jnp.asarray(rng.normal(0, 1, (B, Hkv, S, D)), jnp.float32)
+        a = windowed_attention(q, k, v, window=W, block=blk)
+        b = chunked_attention(q, k, v, causal=True, window=W, chunk=128)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-4)
