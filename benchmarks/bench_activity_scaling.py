@@ -4,17 +4,23 @@ The paper's claim: conventional flat delivery (Brian2-like, cost ~ nnz)
 is insensitive to activity, while the event-driven path scales with it —
 the advantage grows as activity sparsifies.  We reproduce the *relative*
 scaling on CPU with the JAX engines (dense/csr = conventional;
-event = Loihi-like; binned = SAR-compressed) across the paper's
-background-rate sweep, plus the sugar experiment.  The spike-probe
+event = Loihi-like; binned = SAR-compressed; blocked = tile-gated Pallas,
+compiled path on TPU only) across the paper's background-rate sweep, plus
+the sugar experiment.  ``engine_step.*`` rows record steps/sec per engine
+at each sweep point — the perf trajectory every optimisation PR is
+measured against (``--json BENCH_engine_step.json``).  The spike-probe
 slowdown (paper §3.2.5) is reproduced via probe=True (per-step host
 sync)."""
 
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import numpy as np
 
-from repro.core import SimConfig, simulate, synthetic_flywire_cached
+from repro.core import (SimConfig, auto_capacity, simulate,
+                        synthetic_flywire_cached)
 from repro.core.engine import build_synapses
 from .common import row, timeit
 
@@ -33,34 +39,34 @@ def _run_sim(c, cfg, syn, sugar=None, probe=False):
     return res
 
 
-def auto_capacity(c, rate_hz, dt_ms=0.1, margin=4.0):
-    """Provision the event engine for the expected activity level — the
-    static-shape analogue of Loihi's 'work ~ actual spike count'.  The
-    engine still *counts* drops, so under-provisioning is observable."""
-    exp_spikes = max(1.0, c.n * rate_hz * dt_ms * 1e-3)
-    cap = int(max(64, min(c.n, margin * exp_spikes)))
-    mean_fo = max(1.0, c.nnz / c.n)
-    budget = int(max(4096, cap * mean_fo * margin))
-    return cap, budget
+def engines_for(c, rate_hz):
+    cap, budget = auto_capacity(c, max(rate_hz, 0.5))
+    engines = {
+        "csr(conventional)": SimConfig(engine="csr"),
+        "event(loihi-like)": SimConfig(engine="event",
+                                       spike_capacity=cap,
+                                       syn_budget=budget),
+        "binned(SAR)": SimConfig(engine="binned", quantize_bits=9),
+    }
+    if jax.default_backend() == "tpu":
+        # interpret-mode fallback is orders of magnitude off at bench
+        # scale; the compiled tile-gated path only exists on TPU.
+        engines["blocked(tile-gated)"] = SimConfig(engine="blocked",
+                                                   quantize_bits=9)
+    return engines
 
 
 def run(full: bool = False):
     c = synthetic_flywire_cached(n=N, seed=0, target_synapses=SYN)
     sugar = np.arange(20)
     rows = []
-
-    def engines_for(rate_hz):
-        cap, budget = auto_capacity(c, max(rate_hz, 0.5))
-        return {
-            "csr(conventional)": SimConfig(engine="csr"),
-            "event(loihi-like)": SimConfig(engine="event",
-                                           spike_capacity=cap,
-                                           syn_budget=budget),
-            "binned(SAR)": SimConfig(engine="binned", quantize_bits=9),
-        }
+    if jax.default_backend() != "tpu":
+        rows.append(row("engine_step.blocked.skipped", "cpu-backend",
+                        "compiled tile-gated path is TPU-only; interpret "
+                        "fallback excluded from bench-scale timing"))
 
     # --- sugar experiment column (activity ~0.1 Hz effective) ---
-    for name, cfg in engines_for(0.5).items():
+    for name, cfg in engines_for(c, 0.5).items():
         syn = build_synapses(c, cfg)
         res = _run_sim(c, cfg, syn, sugar=sugar)
         t = timeit(lambda: _run_sim(c, cfg, syn, sugar=sugar))
@@ -68,19 +74,22 @@ def run(full: bool = False):
                         f"{T} steps of dt=0.1ms dropped="
                         f"{int(res.dropped)}"))
 
-    # --- background-rate sweep ---
+    # --- background-rate sweep; engine_step.* is the perf trajectory ---
     times = {}
     for rate in RATES:
-        for name, base in engines_for(rate).items():
-            cfg = SimConfig(**{**base.__dict__,
-                               "background_rate_hz": rate,
-                               "poisson_rate_hz": 0.0})
+        for name, base in engines_for(c, rate).items():
+            cfg = dataclasses.replace(base, background_rate_hz=rate,
+                                      poisson_rate_hz=0.0)
             syn = build_synapses(c, cfg)
             res = _run_sim(c, cfg, syn)
             t = timeit(lambda: _run_sim(c, cfg, syn), iters=2)
             times[(name, rate)] = t
             rows.append(row(f"table1.{rate}hz.{name}", f"{t*1e3:.1f}ms",
                             f"dropped={int(res.dropped)}"))
+            engine = base.engine
+            rows.append(row(f"engine_step.{engine}.{rate}hz",
+                            f"{T/t:.1f}",
+                            f"steps/sec ({t/T*1e3:.3f} ms/step, n={c.n})"))
 
     # --- the paper's headline ratios ---
     for rate in (0.5, 40.0):

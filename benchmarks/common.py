@@ -1,5 +1,7 @@
 """Shared benchmark utilities."""
 
+import json
+import platform
 import time
 
 import numpy as np
@@ -26,3 +28,27 @@ def timeit(fn, *args, warmup=1, iters=3):
 def row(name, value, derived=""):
     print(f"{name},{value},{derived}")
     return (name, value, derived)
+
+
+def write_json(path: str, results: dict, full: bool) -> None:
+    """Persist benchmark rows machine-readably so every perf PR leaves a
+    comparable trajectory point (BENCH_*.json convention)."""
+    import jax
+
+    payload = {
+        "meta": {
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+            "backend": jax.default_backend(),
+            "jax": jax.__version__,
+            "platform": platform.platform(),
+            "full": full,
+        },
+        "benchmarks": {
+            name: [{"name": n, "value": v, "derived": d}
+                   for (n, v, d) in rows]
+            for name, rows in results.items()
+        },
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")

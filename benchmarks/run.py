@@ -1,8 +1,11 @@
 """Benchmark harness — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME] \
+        [--json BENCH_engine_step.json]
 
-Prints ``name,value,derived`` CSV rows.  --full runs at the paper's
+Prints ``name,value,derived`` CSV rows; ``--json PATH`` additionally
+writes every row (plus backend/version metadata) machine-readably so each
+perf PR leaves a comparable trajectory point.  --full runs at the paper's
 139,255-neuron scale (slower; cached after first run).
 """
 
@@ -17,7 +20,7 @@ MODULES = [
     "bench_compression",        # Fig 7
     "bench_partition",          # Figs 8-10, chip counts
     "bench_parity",             # Figs 6/12/13/14/15
-    "bench_activity_scaling",   # Table 1, Figs 16-17
+    "bench_activity_scaling",   # Table 1, Figs 16-17, engine_step.* rows
 ]
 
 
@@ -26,23 +29,32 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper scale (139k neurons)")
     ap.add_argument("--only", default="")
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="write all rows + metadata as JSON to PATH")
     args = ap.parse_args()
 
     import importlib
+
+    from .common import write_json
+
     print("name,value,derived")
     t0 = time.time()
+    results: dict[str, list] = {}
     for name in MODULES:
         if args.only and args.only not in name:
             continue
         mod = importlib.import_module(f"benchmarks.{name}")
         t = time.time()
         try:
-            mod.run(full=args.full)
+            results[name] = mod.run(full=args.full) or []
         except Exception as e:  # noqa: BLE001
             print(f"{name}.ERROR,{type(e).__name__},{e}", file=sys.stderr)
             raise
         print(f"# {name} done in {time.time()-t:.1f}s", file=sys.stderr)
     print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
+    if args.json:
+        write_json(args.json, results, full=args.full)
+        print(f"# wrote {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

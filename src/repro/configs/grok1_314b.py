@@ -12,4 +12,7 @@ SMOKE = ModelConfig(
     name="grok-1-314b-smoke", family="moe", n_layers=2, d_model=128,
     n_heads=4, n_kv_heads=2, d_ff=256, vocab=512,
     n_experts=4, top_k=2, act="gelu", norm="rms", use_rope=True,
+    # dropless at smoke scale: capacity drops are a modelled approximation
+    # and would mask prefill/decode cache bugs in the consistency tests
+    moe_capacity_factor=0.0,
 )

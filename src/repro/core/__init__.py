@@ -10,8 +10,10 @@ from .compress import (BinnedFormat, CoreBudget, EllFormat, build_binned,
                        effective_fan_out_ssd, quantize_weights)
 from .partition import (PartitionCaps, Partitioning, caps_from_budget,
                         even_partition, greedy_partition, partition_report)
-from .engine import (SimConfig, SimResult, SynapseData, build_synapses,
-                     simulate, spike_rates_hz)
+from .engine import (SimConfig, SimResult, build_synapses, simulate,
+                     spike_rates_hz)
+from .engines import (DeliveryEngine, auto_capacity, available_engines,
+                      get_engine, register)
 from .validate import ParityStats, mean_rates_over_trials, parity
 
 __all__ = [k for k in dir() if not k.startswith("_")]

@@ -36,6 +36,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from .connectome import Connectome
+from .engines.event import slot_owner
 from .dcsr import DCSR
 from .engine import SimConfig
 from .neuron import LIFState, init_state, lif_step, lif_step_fx, poisson_drive
@@ -128,7 +129,7 @@ def _deliver_events(events: jax.Array, out_indptr, out_tgt, out_w,
     seg_end = jnp.cumsum(lens)
     total = seg_end[-1]
     slot = jnp.arange(syn_budget, dtype=jnp.int32)
-    owner = jnp.searchsorted(seg_end, slot, side="right").astype(jnp.int32)
+    owner = slot_owner(seg_end, syn_budget)
     owner_c = jnp.minimum(owner, E - 1)
     prev_end = jnp.where(owner_c > 0, seg_end[owner_c - 1], 0)
     within = slot - prev_end

@@ -1,0 +1,34 @@
+"""Delivery-engine registry: one module per synaptic-delivery strategy.
+
+Importing this package registers every built-in engine:
+
+======== ==================================================================
+dense    naive W @ s matmul (test-scale oracle)
+ell      target-major padded gather, SSD fan-in cap (paper §3.2.4)
+csr      flat segment-sum over all synapses (conventional baseline)
+event    active-set event-driven scatter (Loihi-like, cost ∝ activity)
+binned   SAR bin-compressed histogram delivery (paper §3.2.3)
+blocked  block-gated Pallas kernel, cost ∝ live 128x128 tiles (TPU-native)
+======== ==================================================================
+
+See ``docs/engines.md`` for the comparison matrix and
+:mod:`repro.core.engines.base` for the :class:`DeliveryEngine` protocol.
+"""
+
+from .base import (DeliveryEngine, available_engines, get_engine, register,
+                   register_state, static_field)
+from . import binned, blocked, csr, dense, ell, event  # noqa: F401 (register)
+from .binned import BinnedEngine, BinnedState
+from .blocked import BlockedEngine, BlockedState
+from .csr import CsrEngine, CsrState
+from .dense import DenseEngine, DenseState
+from .ell import EllEngine, EllState
+from .event import EventEngine, EventState, auto_capacity
+
+__all__ = [
+    "DeliveryEngine", "available_engines", "get_engine", "register",
+    "register_state", "static_field", "auto_capacity",
+    "BinnedEngine", "BinnedState", "BlockedEngine", "BlockedState",
+    "CsrEngine", "CsrState", "DenseEngine", "DenseState",
+    "EllEngine", "EllState", "EventEngine", "EventState",
+]

@@ -1,0 +1,48 @@
+"""Binned engine: SAR bin-compressed delivery.
+
+Per-bin active-source histogram (segment_sum over synapse->bin membership)
+followed by a tiny dense dot with each target's unique quantized weights —
+the memory-compressed analogue of the paper's shared axon routing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..compress import BinnedFormat, build_binned
+from ..connectome import Connectome
+from .base import register, register_state, static_field
+
+
+@register_state
+@dataclasses.dataclass(frozen=True)
+class BinnedState:
+    src: jax.Array                    # [nnz] i32
+    bin_id: jax.Array                 # [nnz] i32 global bin id
+    bin_w: jax.Array                  # [n, n_bins] f32
+    n: int = static_field(default=0)
+    n_bins: int = static_field(default=0)
+
+
+@register
+class BinnedEngine:
+    name = "binned"
+
+    def build(self, c: Connectome, cfg) -> BinnedState:
+        bf: BinnedFormat = build_binned(
+            c, bits=cfg.quantize_bits if cfg.quantize_bits else 16)
+        return BinnedState(
+            src=jnp.asarray(bf.src), bin_id=jnp.asarray(bf.bin_id),
+            bin_w=jnp.asarray(bf.bin_weight.astype(np.float32)),
+            n=c.n, n_bins=bf.n_bins)
+
+    def deliver(self, state: BinnedState, spikes: jax.Array, cfg):
+        counts = jax.ops.segment_sum(
+            spikes[state.src].astype(jnp.float32), state.bin_id,
+            num_segments=state.n * state.n_bins)
+        counts = counts.reshape(state.n, state.n_bins)
+        return (state.bin_w * counts).sum(axis=-1), jnp.int32(0)

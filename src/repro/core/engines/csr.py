@@ -1,0 +1,43 @@
+"""CSR engine: flat segment-sum over all synapses.
+
+Cost ∝ nnz, independent of activity — the Brian2-like conventional
+baseline of the paper's Table 1, and the exactness reference for every
+other engine.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..connectome import Connectome
+from .base import quantized_in_weights, register, register_state, static_field
+
+
+@register_state
+@dataclasses.dataclass(frozen=True)
+class CsrState:
+    src: jax.Array                    # [nnz] i32 source per synapse
+    tgt: jax.Array                    # [nnz] i32 target per synapse
+    w: jax.Array                      # [nnz] f32
+    n: int = static_field(default=0)
+
+
+@register
+class CsrEngine:
+    name = "csr"
+
+    def build(self, c: Connectome, cfg) -> CsrState:
+        w = quantized_in_weights(c, cfg)
+        tgt = np.repeat(np.arange(c.n, dtype=np.int32), c.fan_in)
+        return CsrState(
+            src=jnp.asarray(c.in_indices), tgt=jnp.asarray(tgt),
+            w=jnp.asarray(w.astype(np.float32)), n=c.n)
+
+    def deliver(self, state: CsrState, spikes: jax.Array, cfg):
+        contrib = state.w * spikes[state.src].astype(jnp.float32)
+        g = jax.ops.segment_sum(contrib, state.tgt, num_segments=state.n)
+        return g, jnp.int32(0)

@@ -1,0 +1,39 @@
+"""Dense engine: g = W @ spikes.
+
+The naive matmul the paper calls "computationally wasteful when the
+spiking activity is sparse".  Cost and memory are O(n^2) regardless of
+activity — test-scale oracle only.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..connectome import Connectome
+from .base import quantized_in_weights, register, register_state, static_field
+
+
+@register_state
+@dataclasses.dataclass(frozen=True)
+class DenseState:
+    w: jax.Array                      # [n, n] f32, W[target, source]
+    n: int = static_field(default=0)
+
+
+@register
+class DenseEngine:
+    name = "dense"
+
+    def build(self, c: Connectome, cfg) -> DenseState:
+        w = quantized_in_weights(c, cfg)
+        dense = np.zeros((c.n, c.n), np.float32)
+        tgt = np.repeat(np.arange(c.n), c.fan_in)
+        dense[tgt, c.in_indices] = w
+        return DenseState(w=jnp.asarray(dense), n=c.n)
+
+    def deliver(self, state: DenseState, spikes: jax.Array, cfg):
+        return state.w @ spikes.astype(jnp.float32), jnp.int32(0)

@@ -1,0 +1,42 @@
+"""ELL engine: target-major padded gather (the SSD-capped format).
+
+Each target row holds up to ``ell_width_cap`` (source, weight) slots; rows
+over the cap are uniformly sampled with weight rescale (paper §3.2.4).
+Cost ∝ n * width, activity-independent, but regular — the vectorizable
+"shared synaptic delivery" analogue.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..compress import EllFormat, build_ell
+from ..connectome import Connectome
+from .base import register, register_state, static_field
+
+
+@register_state
+@dataclasses.dataclass(frozen=True)
+class EllState:
+    idx: jax.Array                    # [n, width] i32, pad = n
+    w: jax.Array                      # [n, width] f32
+    n: int = static_field(default=0)
+
+
+@register
+class EllEngine:
+    name = "ell"
+
+    def build(self, c: Connectome, cfg) -> EllState:
+        ell: EllFormat = build_ell(c, cfg.ell_width_cap,
+                                   quantize_bits=cfg.quantize_bits)
+        return EllState(idx=jnp.asarray(ell.idx), w=jnp.asarray(ell.weight),
+                        n=c.n)
+
+    def deliver(self, state: EllState, spikes: jax.Array, cfg):
+        spk_pad = jnp.concatenate(
+            [spikes.astype(jnp.float32), jnp.zeros((1,))])
+        return (state.w * spk_pad[state.idx]).sum(axis=-1), jnp.int32(0)

@@ -1,0 +1,98 @@
+"""Event engine: active-set event-driven delivery (the Loihi-like path).
+
+Compacts spiking neurons into a fixed-capacity index list, ragged-gathers
+their fan-out synapse ranges into a bounded synapse budget, and
+scatter-adds into targets.  Cost ∝ activity — the paper's "performance
+advantages increase with sparser activity" path.  Capacity overruns are
+*counted* (``dropped``), never silent.
+
+The slot->owner assignment (which active neuron does flat slot ``s``
+deliver for?) is the hot part.  It equals
+``searchsorted(seg_end, slot, side="right")`` but is computed here by
+scattering a unit bump at each segment end and taking an inclusive cumsum
+over the budget — O(S_cap + K) sequential-friendly work instead of the
+O(S_cap · log K) gather-heavy probe per slot.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..compress import quantize_weights
+from ..connectome import Connectome
+from .base import register, register_state, static_field
+
+
+@register_state
+@dataclasses.dataclass(frozen=True)
+class EventState:
+    out_indptr: jax.Array             # [n+1] i32 fan-out row pointers
+    out_tgt: jax.Array                # [nnz] i32
+    out_w: jax.Array                  # [nnz] f32
+    n: int = static_field(default=0)
+
+
+def auto_capacity(c: Connectome, rate_hz: float, dt_ms: float = 0.1,
+                  margin: float = 4.0) -> tuple[int, int]:
+    """Provision (spike_capacity, syn_budget) for an expected activity level
+    — the static-shape analogue of Loihi's 'work ~ actual spike count'.
+    The engine still *counts* drops, so under-provisioning is observable."""
+    exp_spikes = max(1.0, c.n * rate_hz * dt_ms * 1e-3)
+    cap = int(max(64, min(c.n, margin * exp_spikes)))
+    mean_fo = max(1.0, c.nnz / c.n)
+    budget = int(max(4096, cap * mean_fo * margin))
+    return cap, budget
+
+
+def slot_owner(seg_end: jax.Array, syn_budget: int) -> jax.Array:
+    """owner[s] = #{k : seg_end[k] <= s} for s in [0, syn_budget) — equal to
+    ``searchsorted(seg_end, slot, side="right")`` but computed by scattering
+    a unit bump at each segment end and taking an inclusive cumsum:
+    O(S_cap + K) instead of O(S_cap · log K).  Shared with the distributed
+    simulator's bounded ragged gather."""
+    bump = jnp.zeros(syn_budget + 1, jnp.int32).at[
+        jnp.minimum(seg_end, syn_budget)].add(1)
+    return jnp.cumsum(bump[:syn_budget])
+
+
+@register
+class EventEngine:
+    name = "event"
+
+    def build(self, c: Connectome, cfg) -> EventState:
+        ow = c.out_weights
+        if cfg.quantize_bits is not None:
+            ow = quantize_weights(ow, cfg.quantize_bits)
+        return EventState(
+            out_indptr=jnp.asarray(c.out_indptr.astype(np.int32)),
+            out_tgt=jnp.asarray(c.out_indices),
+            out_w=jnp.asarray(ow.astype(np.float32)), n=c.n)
+
+    def deliver(self, state: EventState, spikes: jax.Array, cfg):
+        n = state.n
+        capacity, syn_budget = cfg.spike_capacity, cfg.syn_budget
+        (act_idx,) = jnp.where(spikes, size=capacity, fill_value=n)
+        ai = jnp.minimum(act_idx, n - 1)
+        valid_neuron = act_idx < n
+        starts = jnp.where(valid_neuron, state.out_indptr[ai], 0)
+        fo = jnp.where(valid_neuron,
+                       state.out_indptr[ai + 1] - state.out_indptr[ai], 0)
+        seg_end = jnp.cumsum(fo)
+        total = seg_end[-1]
+        owner = slot_owner(seg_end, syn_budget)
+        slot = jnp.arange(syn_budget, dtype=jnp.int32)
+        owner_c = jnp.minimum(owner, capacity - 1)
+        prev_end = jnp.where(owner_c > 0, seg_end[owner_c - 1], 0)
+        within = slot - prev_end
+        syn_ix = jnp.clip(starts[owner_c] + within, 0,
+                          state.out_tgt.shape[0] - 1)
+        valid = slot < jnp.minimum(total, syn_budget)
+        contrib = jnp.where(valid, state.out_w[syn_ix], 0.0)
+        tgt = jnp.where(valid, state.out_tgt[syn_ix], n)
+        g = jax.ops.segment_sum(contrib, tgt, num_segments=n + 1)[:n]
+        dropped = jnp.maximum(total - syn_budget, 0)
+        return g, dropped

@@ -71,6 +71,15 @@ def spike_deliver_pallas(blk_id, weights, spk_blocks, nspk_blocks,
     """
     n_tb, E = blk_id.shape
     grid = (n_tb, E)
+    kwargs = {}
+    # class name varies across jax releases (TPUCompilerParams -> CompilerParams)
+    params_cls = getattr(pltpu, "TPUCompilerParams", None) or \
+        getattr(pltpu, "CompilerParams", None)
+    if not interpret and params_cls is not None:
+        # target blocks are independent; the E axis accumulates into the
+        # same output block and must stay sequential.
+        kwargs["compiler_params"] = params_cls(
+            dimension_semantics=("parallel", "arbitrary"))
     # scalar-prefetch: the blk_id table is prefetched to SMEM and drives the
     # spike-block / spike-count index maps (data-dependent DMA scheduling).
     kernel = pl.pallas_call(
@@ -88,5 +97,6 @@ def spike_deliver_pallas(blk_id, weights, spk_blocks, nspk_blocks,
         ),
         out_shape=jax.ShapeDtypeStruct((n_tb, TGT_BLK), jnp.float32),
         interpret=interpret,
+        **kwargs,
     )
     return kernel(blk_id, spk_blocks, weights, nspk_blocks)

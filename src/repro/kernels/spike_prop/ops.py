@@ -71,12 +71,21 @@ def build_blocked(c: Connectome, quantized: np.ndarray | None = None
                            n_sb=n_sb, occupancy=float(occ))
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def _deliver(blk_id, weights, spk_pad, interpret=True):
-    n_sb = spk_pad.shape[0] - 1
-    nspk = jnp.concatenate([
-        spk_pad[:n_sb].sum(axis=1).astype(jnp.int32),
-        jnp.zeros((1,), jnp.int32)])
+def pad_spike_blocks(spikes, n: int, n_sb: int):
+    """[n] bool/float spikes -> ([n_sb+1, SRC_BLK] f32 blocks with a trailing
+    zero pad block, [n_sb+1] i32 per-block spike counts).  Traced per step;
+    this is the only per-step host->kernel data movement."""
+    spk = jnp.asarray(spikes, jnp.float32)
+    blocks = jnp.pad(spk, (0, n_sb * SRC_BLK - n)).reshape(n_sb, SRC_BLK)
+    spk_pad = jnp.concatenate([blocks, jnp.zeros((1, SRC_BLK), jnp.float32)])
+    nspk = jnp.concatenate([blocks.sum(axis=1).astype(jnp.int32),
+                            jnp.zeros((1,), jnp.int32)])
+    return spk_pad, nspk
+
+
+@functools.partial(jax.jit, static_argnames=("n", "n_sb", "interpret"))
+def _deliver(blk_id, weights, spikes, n, n_sb, interpret=True):
+    spk_pad, nspk = pad_spike_blocks(spikes, n, n_sb)
     return spike_deliver_pallas(blk_id, weights, spk_pad, nspk,
                                 interpret=interpret)
 
@@ -86,14 +95,13 @@ def spike_deliver(bs: BlockedSynapses, spikes, *, interpret: bool = True,
     """spikes: [n] bool/float.  Returns g drive [n] f32.
 
     ``device_arrays``: optional (blk_id, weights) jnp arrays to avoid
-    re-uploading the tile store every call.
+    re-uploading the tile store every call.  (The ``blocked`` simulation
+    engine in :mod:`repro.core.engines.blocked` keeps the tiles
+    device-resident for the whole run; this wrapper is the standalone /
+    test entry point.)
     """
-    n, n_sb = bs.n, bs.n_sb
-    spk = jnp.asarray(spikes, jnp.float32)
-    spk = jnp.pad(spk, (0, n_sb * SRC_BLK - n))
-    spk_pad = jnp.concatenate([spk.reshape(n_sb, SRC_BLK),
-                               jnp.zeros((1, SRC_BLK), jnp.float32)])
     blk_id, weights = (device_arrays if device_arrays is not None
                        else (jnp.asarray(bs.blk_id), jnp.asarray(bs.weights)))
-    out = _deliver(blk_id, weights, spk_pad, interpret=interpret)
-    return out.reshape(-1)[:n]
+    out = _deliver(blk_id, weights, jnp.asarray(spikes), bs.n, bs.n_sb,
+                   interpret=interpret)
+    return out.reshape(-1)[:bs.n]

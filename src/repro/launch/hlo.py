@@ -77,6 +77,18 @@ _SKIP_BYTES_OPS = (
 _SLICE_OPS = ("dynamic-update-slice", "dynamic-slice", "gather", "scatter",
               "copy", "slice", "concatenate", "pad", "reduce", "transpose")
 
+# one operand reference, optionally preceded by its inline type (newer XLA
+# prints `dot(f32[128,128]{1,0} %lhs, ...)`; older prints `dot(%lhs, ...)`)
+_OPERAND_TOKEN_RE = re.compile(
+    r"(?:([a-z0-9]+\[[\d,]*\](?:\{[\d,]*\})?)\s+)?%([\w\.\-]+)")
+
+
+def _operands(s: str, shapes: dict) -> list:
+    """[(name, shape_str)] per %operand; inline type wins over the defining
+    instruction's recorded result type."""
+    return [(name, shp if shp else shapes.get(name, ""))
+            for shp, name in _OPERAND_TOKEN_RE.findall(s)]
+
 
 def _shape_bytes_all(s: str) -> int:
     total = 0
@@ -163,9 +175,8 @@ def _dot_flops(instr: Instr, shapes: dict) -> float:
     ops = re.search(r"\bdot\(([^)]*)\)", body)
     if not ops:
         return 0.0
-    lhs_name = ops.group(1).split(",")[0].strip().lstrip("%")
-    lhs_shape_str = shapes.get(lhs_name, "")
-    _, lhs_dims = _first_shape(lhs_shape_str)
+    opnds = _operands(ops.group(1), shapes)
+    _, lhs_dims = _first_shape(opnds[0][1]) if opnds else (None, [])
     mC = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", body)
     contracted = 1
     if mC and mC.group(1) and lhs_dims:
@@ -197,12 +208,9 @@ def _instr_bytes(instr: Instr, shapes: dict, comps: dict | None = None) -> int:
                 return result            # layout/dtype root: one write
             if root.op in _SLICE_OPS:
                 ops = re.search(r"\bfusion\(([^)]*)\)", instr.body)
-                sizes = []
-                if ops:
-                    for o in ops.group(1).split(","):
-                        o = o.strip().lstrip("%")
-                        if o in shapes:
-                            sizes.append(_shape_bytes_all(shapes[o]))
+                sizes = [_shape_bytes_all(shp) for _, shp in
+                         _operands(ops.group(1), shapes)] if ops else []
+                sizes = [s for s in sizes if s > 0]
                 small = min(sizes) if sizes else result
                 return 2 * min(small, result)
         op = "fusion"
@@ -213,9 +221,9 @@ def _instr_bytes(instr: Instr, shapes: dict, comps: dict | None = None) -> int:
         # write slice + read slice: operand 1 is the update
         ops = re.search(r"dynamic-update-slice\(([^)]*)\)", instr.body)
         if ops:
-            parts = [o.strip().lstrip("%") for o in ops.group(1).split(",")]
-            if len(parts) >= 2 and parts[1] in shapes:
-                return 2 * _shape_bytes_all(shapes[parts[1]])
+            parts = _operands(ops.group(1), shapes)
+            if len(parts) >= 2 and parts[1][1]:
+                return 2 * _shape_bytes_all(parts[1][1])
         return 0
     if op in ("dynamic-slice", "gather", "slice"):
         return 2 * result          # read slice + write result
@@ -224,18 +232,15 @@ def _instr_bytes(instr: Instr, shapes: dict, comps: dict | None = None) -> int:
     if op == "scatter":
         ops = re.search(r"scatter\(([^)]*)\)", instr.body)
         if ops:
-            parts = [o.strip().lstrip("%") for o in ops.group(1).split(",")]
-            upd = parts[-1] if parts else ""
-            if upd in shapes:
-                return 2 * _shape_bytes_all(shapes[upd])
+            parts = _operands(ops.group(1), shapes)
+            if parts and parts[-1][1]:
+                return 2 * _shape_bytes_all(parts[-1][1])
         return 2 * result
     total = result
     ops = re.search(rf"\b{re.escape(op)}\(([^)]*)\)", instr.body)
     if ops:
-        for o in ops.group(1).split(","):
-            o = o.strip().lstrip("%")
-            if o in shapes:
-                total += _shape_bytes_all(shapes[o])
+        for _, shp in _operands(ops.group(1), shapes):
+            total += _shape_bytes_all(shp)
     return total
 
 

@@ -32,8 +32,9 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", choices=["smoke", "bench", "full"],
                     default="bench")
+    from repro.core import available_engines
     ap.add_argument("--engine", default="event",
-                    choices=["dense", "csr", "ell", "event", "binned"])
+                    choices=available_engines())
     ap.add_argument("--dt", type=float, default=0.1, choices=[0.1, 1.0])
     ap.add_argument("--trials", type=int, default=1)
     ap.add_argument("--t-ms", type=float, default=0.0)

@@ -349,6 +349,12 @@ def moe_apply(p, x, *, top_k, capacity_factor=1.25, act="gelu"):
     buffers per device.  Per-group capacity is the standard Switch/GShard
     formulation.
 
+    ``capacity_factor <= 0`` selects dropless dispatch (C = S * top_k, the
+    worst-case bound): exact but memory-heavy — the setting smoke configs
+    use so prefill/decode consistency is testable (single-token decode can
+    never drop, so capacity drops in the full forward would show up as
+    spurious cache mismatches).
+
     Returns (out, aux_loss).
     """
     B, S, d = x.shape
@@ -359,7 +365,10 @@ def moe_apply(p, x, *, top_k, capacity_factor=1.25, act="gelu"):
     gate_vals = gate_vals / jnp.maximum(
         gate_vals.sum(-1, keepdims=True), 1e-9)
 
-    C = int(capacity_factor * S * top_k / E)
+    if capacity_factor <= 0:
+        C = S * top_k
+    else:
+        C = int(capacity_factor * S * top_k / E)
     C = max(8, ((C + 7) // 8) * 8)
 
     def dispatch_one(xe, ce, ge):

@@ -42,6 +42,7 @@ class ModelConfig:
     n_experts: int = 0
     top_k: int = 0
     shared_expert: bool = False
+    moe_capacity_factor: float = 1.25  # 0 -> dropless (C = S * top_k)
     qkv_bias: bool = False
     norm: str = "rms"                 # rms | ln
     act: str = "silu"

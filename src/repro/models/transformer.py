@@ -97,7 +97,9 @@ def block_apply(p, kind, x, cfg, *, causal=True, impl=None, max_len=None):
     x = x + m
     h = norm(p["norm2"], x)
     if cfg.n_experts > 0:
-        f, aux = moe_apply(p["ffn"], h, top_k=cfg.top_k, act=cfg.act)
+        f, aux = moe_apply(p["ffn"], h, top_k=cfg.top_k,
+                           capacity_factor=cfg.moe_capacity_factor,
+                           act=cfg.act)
     elif kind == "rwkv":
         f, shift_c = rw.chanmix_apply(p["ffn"], h)
         if max_len is not None:
@@ -131,7 +133,9 @@ def block_decode(p, kind, x, cfg, cache, pos):
     x = x + m
     h = norm(p["norm2"], x)
     if cfg.n_experts > 0:
-        f, aux = moe_apply(p["ffn"], h, top_k=cfg.top_k, act=cfg.act)
+        f, aux = moe_apply(p["ffn"], h, top_k=cfg.top_k,
+                           capacity_factor=cfg.moe_capacity_factor,
+                           act=cfg.act)
     elif kind == "rwkv":
         f, sc = rw.chanmix_apply(p["ffn"], h, cache["shift_c"])
         cache = dict(cache, shift_c=sc)

@@ -2,13 +2,13 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from conftest import given, requires_hypothesis, settings, st
 
 from repro.core import (SimConfig, build_binned, build_ell,
-                        compression_report, effective_fan_in_sar,
+                        compression_report, effective_fan_in_sar, get_engine,
                         quantize_weights, synthetic_flywire)
-from repro.core.engine import (SynapseData, build_synapses, deliver_binned,
-                               deliver_csr, deliver_ell)
+from repro.core.engine import build_synapses
 
 
 @pytest.fixture(scope="module")
@@ -49,10 +49,12 @@ def test_binned_delivery_equals_csr_on_quantized(net):
     import jax.numpy as jnp
     rng = np.random.default_rng(0)
     spk = jnp.asarray(rng.random(net.n) < 0.05)
-    syn_b = build_synapses(net, SimConfig(engine="binned", quantize_bits=9))
-    syn_c = build_synapses(net, SimConfig(engine="csr", quantize_bits=9))
-    gb = np.asarray(deliver_binned(spk, syn_b))
-    gc = np.asarray(deliver_csr(spk, syn_c))
+    cfg_b = SimConfig(engine="binned", quantize_bits=9)
+    cfg_c = SimConfig(engine="csr", quantize_bits=9)
+    syn_b = build_synapses(net, cfg_b)
+    syn_c = build_synapses(net, cfg_c)
+    gb = np.asarray(get_engine("binned").deliver(syn_b, spk, cfg_b)[0])
+    gc = np.asarray(get_engine("csr").deliver(syn_c, spk, cfg_c)[0])
     np.testing.assert_allclose(gb, gc, atol=1e-4)
 
 
@@ -81,6 +83,7 @@ def test_binned_memory_smaller_than_flat(net):
     assert bf.bin_weight.shape[1] <= 512
 
 
+@requires_hypothesis
 @settings(max_examples=30, deadline=None)
 @given(st.integers(2, 16), st.integers(0, 1000))
 def test_quantize_idempotent_and_bounded(bits, seed):

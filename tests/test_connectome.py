@@ -1,8 +1,8 @@
 """Connectome container + synthetic generator (paper Figs 2-3 statistics)."""
 
 import numpy as np
-import pytest
-from hypothesis import given, settings, strategies as st
+
+from conftest import given, requires_hypothesis, settings, st
 
 from repro.core import synthetic_flywire, from_edges
 from repro.core.connectome import _transpose_csr
@@ -48,6 +48,7 @@ def test_dense_matches_csr():
     np.testing.assert_array_equal(fi, c.fan_in)
 
 
+@requires_hypothesis
 @settings(max_examples=25, deadline=None)
 @given(st.integers(10, 60), st.integers(20, 300), st.integers(0, 10_000))
 def test_transpose_roundtrip(n, nnz, seed):
@@ -69,6 +70,7 @@ def test_transpose_roundtrip(n, nnz, seed):
     assert a == b
 
 
+@requires_hypothesis
 @settings(max_examples=20, deadline=None)
 @given(st.integers(5, 40), st.integers(1, 200), st.integers(0, 99))
 def test_from_edges_preserves_total_weight(n, nnz, seed):

@@ -1,10 +1,11 @@
-"""Engine equivalence: dense / csr / ell / event / binned must agree
-(the paper's 'same network, different delivery strategy' invariant)."""
+"""Engine equivalence: dense / csr / ell / event / binned / blocked must
+agree (the paper's 'same network, different delivery strategy' invariant)."""
 
 import numpy as np
 import pytest
 
-from repro.core import SimConfig, simulate, synthetic_flywire
+from repro.core import (SimConfig, auto_capacity, available_engines,
+                        get_engine, simulate, synthetic_flywire)
 from repro.core.engine import spike_rates_hz
 
 
@@ -15,7 +16,16 @@ def net():
     return c, sugar
 
 
-ENGINES = ["dense", "csr", "ell", "event", "binned"]
+ENGINES = ["dense", "csr", "ell", "event", "binned", "blocked"]
+
+
+def test_registry_lists_all_builtin_engines():
+    assert set(ENGINES) <= set(available_engines())
+    for name in ENGINES:
+        eng = get_engine(name)
+        assert eng.name == name
+    with pytest.raises(ValueError, match="unknown engine"):
+        get_engine("no-such-engine")
 
 
 @pytest.mark.parametrize("engine", ENGINES[1:])
@@ -29,11 +39,43 @@ def test_engines_agree_exactly(net, engine):
     assert int(out.dropped) == 0
 
 
+@pytest.mark.parametrize("qbits", [None, 9])
+def test_blocked_engine_matches_csr(net, qbits):
+    """Tile-gated Pallas delivery is a storage change, not an approximation:
+    integer weights sum exactly in f32, so spike counts are bit-identical."""
+    c, sugar = net
+    a = simulate(c, SimConfig(engine="csr", quantize_bits=qbits), 300,
+                 sugar, seed=7)
+    b = simulate(c, SimConfig(engine="blocked", quantize_bits=qbits), 300,
+                 sugar, seed=7)
+    np.testing.assert_array_equal(np.asarray(a.counts), np.asarray(b.counts))
+    assert int(b.dropped) == 0
+
+
 def test_event_engine_budget_drops_are_counted(net):
     c, sugar = net
     cfg = SimConfig(engine="event", syn_budget=256, background_rate_hz=200.0)
     out = simulate(c, cfg, 100, sugar, seed=0)
     assert int(out.dropped) > 0     # deliberately starved budget
+
+
+def test_event_auto_capacity_matches_csr_exactly(net):
+    """Drop-accounting regression: auto_capacity provisioning must leave the
+    event engine lossless (dropped == 0) and bit-identical to csr, while an
+    under-provisioned budget on the same workload reports every loss."""
+    c, _ = net
+    rate = 40.0
+    cap, budget = auto_capacity(c, rate)
+    base = dict(background_rate_hz=rate, poisson_rate_hz=0.0)
+    ref = simulate(c, SimConfig(engine="csr", **base), 200, None, seed=2)
+    out = simulate(c, SimConfig(engine="event", spike_capacity=cap,
+                                syn_budget=budget, **base), 200, None, seed=2)
+    assert int(out.dropped) == 0
+    np.testing.assert_array_equal(np.asarray(ref.counts),
+                                  np.asarray(out.counts))
+    starved = simulate(c, SimConfig(engine="event", spike_capacity=cap,
+                                    syn_budget=64, **base), 200, None, seed=2)
+    assert int(starved.dropped) > 0
 
 
 def test_fixed_point_engine_close_to_float(net):

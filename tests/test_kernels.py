@@ -102,6 +102,31 @@ def test_spike_prop_gating_zero_blocks():
     assert np.abs(out).max() == 0.0
 
 
+def test_build_blocked_invariants():
+    """Tile-store structural invariants the blocked engine relies on."""
+    from repro.kernels.spike_prop.kernel import SRC_BLK, TGT_BLK
+    c = synthetic_flywire(n=1000, target_synapses=30_000, seed=5)
+    bs = build_blocked(c)
+    assert bs.n_tb == -(-c.n // TGT_BLK)
+    assert bs.n_sb == -(-c.n // SRC_BLK)
+    assert bs.blk_id.shape[0] == bs.n_tb
+    assert bs.weights.shape == (*bs.blk_id.shape, TGT_BLK, SRC_BLK)
+    valid = bs.blk_id < bs.n_sb
+    assert bs.tiles_stored == int(valid.sum())
+    assert 0 < bs.tiles_stored <= bs.n_tb * bs.n_sb
+    # occupancy is nnz over stored-tile capacity, in (0, 1]
+    assert np.isclose(bs.occupancy,
+                      c.nnz / (bs.tiles_stored * TGT_BLK * SRC_BLK))
+    assert 0.0 < bs.occupancy <= 1.0
+    # pad tiles carry no weight; stored mass equals the connectome's
+    assert np.all(bs.weights[~valid] == 0.0)
+    assert bs.weights.sum() == float(c.in_weights.sum())
+    # within a target block, each source block appears in at most one tile
+    for tb in range(bs.n_tb):
+        ids = bs.blk_id[tb][valid[tb]]
+        assert len(np.unique(ids)) == len(ids)
+
+
 # ---------------------------------------------------- flash attention ----
 
 @pytest.mark.parametrize("B,H,Hkv,Sq,D,causal,window", [

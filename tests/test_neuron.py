@@ -3,7 +3,8 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+from conftest import given, requires_hypothesis, settings, st
 
 from repro.core.neuron import (FLYWIRE_LIF, FLYWIRE_LIF_1MS, LIFParams,
                                init_state, lif_step, lif_step_fx, fx_to_mv,
@@ -97,6 +98,7 @@ def test_fx_roundtrip():
     np.testing.assert_allclose(fx_to_mv(mv_to_fx(x, p), p), x, atol=1e-3)
 
 
+@requires_hypothesis
 @settings(max_examples=20, deadline=None)
 @given(st.floats(0.05, 1.0), st.integers(1, 50))
 def test_refractory_invariant(dt, drive):
