@@ -5,12 +5,16 @@ is insensitive to activity, while the event-driven path scales with it —
 the advantage grows as activity sparsifies.  We reproduce the *relative*
 scaling on CPU with the JAX engines (dense/csr = conventional;
 event = Loihi-like; binned = SAR-compressed; blocked = tile-gated Pallas,
-compiled path on TPU only) across the paper's background-rate sweep, plus
-the sugar experiment.  ``engine_step.*`` rows record steps/sec per engine
-at each sweep point — the perf trajectory every optimisation PR is
-measured against (``--json BENCH_engine_step.json``).  The spike-probe
-slowdown (paper §3.2.5) is reproduced via probe=True (per-step host
-sync)."""
+compiled path on TPU only).
+
+All stimulation flows through the scenario registry (repro.exp): the
+background-rate sweep is the ``activity_sweep`` scenario with
+``background_hz`` as its parameter, and the ``engine_step.*`` steps/sec
+rows — the perf trajectory every optimisation PR is measured against
+(``--json BENCH_engine_step.json``) — now also cover stimulus diversity
+via per-scenario rows (``engine_step.<engine>.scenario.<name>``).  The
+spike-probe slowdown (paper §3.2.5) is reproduced via
+``ProbeSpec(raster=True)`` (per-step record stacking + host fetch)."""
 
 from __future__ import annotations
 
@@ -22,19 +26,23 @@ import numpy as np
 from repro.core import (SimConfig, auto_capacity, simulate,
                         synthetic_flywire_cached)
 from repro.core.engine import build_synapses
+from repro.exp import ProbeSpec, build_scenario
 from .common import row, timeit
 
 # large enough that synaptic delivery (not per-op dispatch overhead)
 # dominates a CPU step — the regime where Table 1's scaling is measurable
 N, SYN, T = 60_000, 6_000_000, 100
 RATES = [0.5, 1.0, 2.0, 5.0, 10.0, 20.0, 40.0]
+# stimulus-diversity trajectory points (scenario name -> params);
+# sugar_feeding rows are reused from the table1.sugar block, not re-timed
+SCENARIOS = {
+    "background_storm": {"background_hz": 40.0},
+    "silent_baseline": {},
+}
 
 
-def _run_sim(c, cfg, syn, sugar=None, probe=False):
-    res = simulate(c, cfg, T, sugar, seed=0, syn=syn)
-    if probe:
-        # per-step host sync is emulated by fetching the raster per chunk
-        np.asarray(res.counts)
+def _run_sim(c, cfg, syn, stim, probes=None):
+    res = simulate(c, cfg, T, seed=0, syn=syn, stimulus=stim, probes=probes)
     jax.block_until_ready(res.counts)
     return res
 
@@ -58,38 +66,61 @@ def engines_for(c, rate_hz):
 
 def run(full: bool = False):
     c = synthetic_flywire_cached(n=N, seed=0, target_synapses=SYN)
-    sugar = np.arange(20)
     rows = []
     if jax.default_backend() != "tpu":
         rows.append(row("engine_step.blocked.skipped", "cpu-backend",
                         "compiled tile-gated path is TPU-only; interpret "
                         "fallback excluded from bench-scale timing"))
 
-    # --- sugar experiment column (activity ~0.1 Hz effective) ---
+    # --- sugar experiment column (activity ~0.1 Hz effective); doubles as
+    #     the sugar_feeding stimulus-diversity trajectory point ---
     for name, cfg in engines_for(c, 0.5).items():
+        stim = build_scenario("sugar_feeding", c, cfg)
         syn = build_synapses(c, cfg)
-        res = _run_sim(c, cfg, syn, sugar=sugar)
-        t = timeit(lambda: _run_sim(c, cfg, syn, sugar=sugar))
+        res = _run_sim(c, cfg, syn, stim)
+        t = timeit(lambda: _run_sim(c, cfg, syn, stim))
         rows.append(row(f"table1.sugar.{name}", f"{t*1e3:.1f}ms",
                         f"{T} steps of dt=0.1ms dropped="
                         f"{int(res.dropped)}"))
+        rows.append(row(f"engine_step.{cfg.engine}.scenario.sugar_feeding",
+                        f"{T/t:.1f}",
+                        f"steps/sec ({t/T*1e3:.3f} ms/step, n={c.n}, "
+                        f"dropped={int(res.dropped)})"))
 
-    # --- background-rate sweep; engine_step.* is the perf trajectory ---
+    # --- background-rate sweep through the activity_sweep scenario;
+    #     engine_step.<engine>.<rate>hz is the perf trajectory ---
     times = {}
     for rate in RATES:
         for name, base in engines_for(c, rate).items():
-            cfg = dataclasses.replace(base, background_rate_hz=rate,
-                                      poisson_rate_hz=0.0)
+            cfg = dataclasses.replace(base, poisson_rate_hz=0.0)
+            stim = build_scenario("activity_sweep", c, cfg,
+                                  background_hz=rate)
             syn = build_synapses(c, cfg)
-            res = _run_sim(c, cfg, syn)
-            t = timeit(lambda: _run_sim(c, cfg, syn), iters=2)
+            res = _run_sim(c, cfg, syn, stim)
+            t = timeit(lambda: _run_sim(c, cfg, syn, stim), iters=2)
             times[(name, rate)] = t
             rows.append(row(f"table1.{rate}hz.{name}", f"{t*1e3:.1f}ms",
-                            f"dropped={int(res.dropped)}"))
+                            f"dropped={int(res.dropped)} "
+                            f"scenario=activity_sweep"))
             engine = base.engine
             rows.append(row(f"engine_step.{engine}.{rate}hz",
                             f"{T/t:.1f}",
-                            f"steps/sec ({t/T*1e3:.3f} ms/step, n={c.n})"))
+                            f"steps/sec ({t/T*1e3:.3f} ms/step, n={c.n}, "
+                            f"scenario=activity_sweep)"))
+
+    # --- stimulus diversity: steps/sec per registry scenario ---
+    for scen, params in SCENARIOS.items():
+        for name, base in engines_for(c, params.get("background_hz", 0.5)
+                                      ).items():
+            cfg = base
+            stim = build_scenario(scen, c, cfg, **params)
+            syn = build_synapses(c, cfg)
+            res = _run_sim(c, cfg, syn, stim)
+            t = timeit(lambda: _run_sim(c, cfg, syn, stim), iters=2)
+            rows.append(row(f"engine_step.{base.engine}.scenario.{scen}",
+                            f"{T/t:.1f}",
+                            f"steps/sec ({t/T*1e3:.3f} ms/step, n={c.n}, "
+                            f"dropped={int(res.dropped)})"))
 
     # --- the paper's headline ratios ---
     for rate in (0.5, 40.0):
@@ -108,14 +139,15 @@ def run(full: bool = False):
                     "event-driven: cost tracks activity (paper: ~50x)"))
 
     # --- spike-probe slowdown (paper §3.2.5) ---
-    cfg = SimConfig(engine="event", collect_raster=True)
+    cfg = SimConfig(engine="event")
+    stim = build_scenario("sugar_feeding", c, cfg)
     syn = build_synapses(c, cfg)
+    raster = ProbeSpec(raster=True)
     t_probe = timeit(lambda: np.asarray(
-        simulate(c, cfg, T, sugar, seed=0, syn=syn).raster), iters=2)
-    cfg2 = SimConfig(engine="event")
-    syn2 = build_synapses(c, cfg2)
-    t_free = timeit(lambda: _run_sim(c, cfg2, syn2, sugar=sugar), iters=2)
+        simulate(c, cfg, T, seed=0, syn=syn, stimulus=stim,
+                 probes=raster).raster), iters=2)
+    t_free = timeit(lambda: _run_sim(c, cfg, syn, stim), iters=2)
     rows.append(row("probe.slowdown", f"{t_probe/t_free:.2f}x",
-                    "raster collection vs counters-only (paper: probes "
+                    "raster probe vs counters-only (paper: probes "
                     "significantly slow execution)"))
     return rows

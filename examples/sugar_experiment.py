@@ -11,10 +11,11 @@ import numpy as np
 
 from repro.core import (CoreBudget, SimConfig, caps_from_budget,
                         compression_report, greedy_partition, parity,
-                        simulate, synthetic_flywire_cached)
+                        synthetic_flywire_cached)
 from repro.core.dcsr import build_dcsr, edge_cut
 from repro.core.distributed import DistConfig, simulate_distributed
 from repro.core.partition import pad_to_uniform, partition_report
+from repro.exp import run_trials
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--cores", type=int, default=4)
@@ -47,8 +48,9 @@ res = simulate_distributed(d, DistConfig(sim=sim, scheme="event"), T,
 print(f"distributed sim: {int(res.counts.sum())} spikes, "
       f"dropped {res.dropped}")
 
-# --- parity vs the monolithic float reference (paper Figs 6/12) ---
-ref = simulate(c, SimConfig(engine="csr"), T, sugar, seed=5)
-ra = np.asarray(ref.counts) / (T * 0.1e-3)
+# --- parity vs the monolithic float reference (paper Figs 6/12):
+# a vmapped 3-trial batch, one compiled call (repro.exp.run_trials) ---
+ref = run_trials(c, SimConfig(engine="csr"), T, sugar, seeds=[5, 6, 7])
+ra = ref.mean_rates_hz(T, 0.1)
 rb = res.counts / (T * 0.1e-3)
 print("parity:", parity(ra, rb).summary())

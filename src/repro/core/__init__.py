@@ -1,8 +1,14 @@
 """Core library: the paper's contribution (connectome -> distributed
-event-driven simulation with compression-aware partitioning)."""
+event-driven simulation with compression-aware partitioning).
 
-from .connectome import (Connectome, from_edges, load_flywire_parquet,
-                         synthetic_flywire, synthetic_flywire_cached)
+Stimulation and observability are supplied by the :mod:`repro.exp` layer
+above this one (stimulus protocols, probes, trial batches, scenarios);
+the simulation loop here only exposes the hooks.
+"""
+
+from .connectome import (Connectome, cache_path, from_edges,
+                         load_flywire_parquet, synthetic_flywire,
+                         synthetic_flywire_cached)
 from .neuron import (FLYWIRE_LIF, FLYWIRE_LIF_1MS, LIFParams, LIFState,
                      init_state, lif_step, lif_step_fx)
 from .compress import (BinnedFormat, CoreBudget, EllFormat, build_binned,
@@ -10,10 +16,11 @@ from .compress import (BinnedFormat, CoreBudget, EllFormat, build_binned,
                        effective_fan_out_ssd, quantize_weights)
 from .partition import (PartitionCaps, Partitioning, caps_from_budget,
                         even_partition, greedy_partition, partition_report)
-from .engine import (SimConfig, SimResult, build_synapses, simulate,
-                     spike_rates_hz)
+from .engine import (SimCarry, SimConfig, SimResult, build_synapses,
+                     simulate, spike_rates_hz)
 from .engines import (DeliveryEngine, auto_capacity, available_engines,
                       get_engine, register)
-from .validate import ParityStats, mean_rates_over_trials, parity
+from .validate import (ParityStats, mean_rates_over_trials, parity,
+                       raster_to_times)
 
 __all__ = [k for k in dir() if not k.startswith("_")]

@@ -21,6 +21,7 @@ these (see :mod:`repro.core.engine`).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import os
 from typing import Optional
 
@@ -245,15 +246,27 @@ def load_flywire_parquet(path: str) -> Connectome:
     return from_edges(n, pre, post, w)  # pragma: no cover
 
 
-def cache_path(n: int, seed: int) -> str:
+def cache_path(n: int, seed: int, **kw) -> str:
+    """Cache filename for a synthetic connectome.
+
+    Any generator kwargs beyond (n, seed) — target_synapses, frac_inhibitory,
+    ... — are folded into a digest so differently-parameterized connectomes
+    never collide in the cache (kwarg-free calls keep the legacy name).
+    """
+    base = f"connectome_{n}_{seed}"
+    if kw:
+        digest = hashlib.md5(
+            repr(sorted(kw.items())).encode()).hexdigest()[:10]
+        base += f"_{digest}"
     return os.path.join(
-        os.environ.get("REPRO_CACHE", "/tmp/repro_cache"), f"connectome_{n}_{seed}.npz"
+        os.environ.get("REPRO_CACHE", "/tmp/repro_cache"), base + ".npz"
     )
 
 
 def synthetic_flywire_cached(n: int, seed: int = 0, **kw) -> Connectome:
-    """Disk-cached synthetic connectome (full-scale generation takes ~min)."""
-    path = cache_path(n, seed)
+    """Disk-cached synthetic connectome (full-scale generation takes ~min).
+    The cache key covers every generator kwarg, not just (n, seed)."""
+    path = cache_path(n, seed, **kw)
     if os.path.exists(path):
         z = np.load(path)
         return Connectome(n=int(z["n"]), **{

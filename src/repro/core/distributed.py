@@ -18,6 +18,11 @@ Every partition is computationally self-contained except for the spike
 exchange — exactly the paper's framing of the edge cut as a sparse,
 data-dependent halo.
 
+Stimulation flows through the same :mod:`repro.exp` stimulus pytrees as the
+monolithic loop: :func:`repro.exp.shard_stimulus` remaps per-neuron leaves
+onto the partitioning, and each partition steps the stimulus on its local
+``[U]`` slab with its own PRNG stream (stateless stimuli only).
+
 The same step function also runs unsharded under vmap (``emulate=True``) so
 semantics are testable on one device; the shard_map path is exercised in
 tests via a subprocess with XLA_FLAGS=--xla_force_host_platform_device_count.
@@ -26,7 +31,6 @@ tests via a subprocess with XLA_FLAGS=--xla_force_host_platform_device_count.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import NamedTuple
 
 import jax
@@ -35,11 +39,10 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from .connectome import Connectome
 from .engines.event import slot_owner
 from .dcsr import DCSR
 from .engine import SimConfig
-from .neuron import LIFState, init_state, lif_step, lif_step_fx, poisson_drive
+from .neuron import LIFState, init_state
 
 
 # --------------------------------------------------------------------------
@@ -58,12 +61,10 @@ class DistArrays(NamedTuple):
     out_indptr: jax.Array     # [P, P*U + 1] int32
     out_tgt: jax.Array        # [P, S] int32 local target; pad = U
     out_w: jax.Array          # [P, S] float32
-    sugar_mask: jax.Array     # [P, U] bool
     pad_mask: jax.Array       # [P, U] bool — True for real neurons
 
 
-def build_dist_arrays(d: DCSR, sugar_neurons: np.ndarray | None = None
-                      ) -> DistArrays:
+def build_dist_arrays(d: DCSR) -> DistArrays:
     P_, U, S = d.n_parts, d.part_size, d.s_max
     n_glob = P_ * U
 
@@ -84,10 +85,6 @@ def build_dist_arrays(d: DCSR, sugar_neurons: np.ndarray | None = None
         counts = np.bincount(src_s, minlength=n_glob)
         np.cumsum(counts, out=out_indptr[p, 1:])
 
-    sugar = np.zeros((P_, U), dtype=bool)
-    if sugar_neurons is not None:
-        new_ids = d.perm[np.asarray(sugar_neurons)]
-        sugar[new_ids // U, new_ids % U] = True
     pad = np.zeros((P_, U), dtype=bool)
     real = d.inv_perm.reshape(P_, U) >= 0
     pad[:] = real
@@ -99,7 +96,6 @@ def build_dist_arrays(d: DCSR, sugar_neurons: np.ndarray | None = None
         out_indptr=jnp.asarray(out_indptr),
         out_tgt=jnp.asarray(out_tgt),
         out_w=jnp.asarray(out_w),
-        sugar_mask=jnp.asarray(sugar),
         pad_mask=jnp.asarray(pad),
     )
 
@@ -152,6 +148,7 @@ class DistCarry(NamedTuple):
     key: jax.Array
     counts: jax.Array      # [U] int32
     dropped: jax.Array     # i32 scalar
+    stim: tuple            # stimulus state (stateless stimuli: no leaves)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -162,14 +159,15 @@ class DistConfig:
     syn_budget: int = 32_768     # per-partition synapse budget per step
 
 
-def _dist_step(carry: DistCarry, _, *, arrs: DistArrays, cfg: DistConfig,
-               P_: int, U: int, axis: str | None):
+def _dist_step(carry: DistCarry, t, *, arrs: DistArrays, stim,
+               cfg: DistConfig, P_: int, U: int, axis: str | None):
     """One simulation step on one partition.  `axis` names the mesh axis for
     collectives; None means the caller runs it under vmap with manual
     all-gather emulation (spmd_axis_name)."""
+    from repro.exp.stimulus import apply_drive, n_split
     sc = cfg.sim
     p = sc.params
-    key, k_poisson, k_bg = jax.random.split(carry.key, 3)
+    keys = jax.random.split(carry.key, n_split(stim))
     delayed = carry.ring[carry.ptr]                      # [U] bool local
 
     n_glob = P_ * U
@@ -192,33 +190,15 @@ def _dist_step(carry: DistCarry, _, *, arrs: DistArrays, cfg: DistConfig,
     else:
         raise ValueError(cfg.scheme)
 
-    v_in = None
-    force = None
-    if sc.poisson_rate_hz > 0:
-        draws = poisson_drive(k_poisson, U, sc.poisson_rate_hz, p.dt,
-                              arrs.sugar_mask)
-        if sc.poisson_to_v:
-            v_in = draws.astype(jnp.float32) * (p.v_th * 1.5)
-        else:
-            g_units = g_units + draws.astype(jnp.float32) * sc.poisson_weight
-    if sc.background_rate_hz > 0:
-        force = poisson_drive(k_bg, U, sc.background_rate_hz, p.dt,
-                              arrs.pad_mask)
-
-    if sc.fixed_point:
-        g_in = jnp.round(g_units).astype(jnp.int32)
-        v_fx = (None if v_in is None
-                else jnp.round(v_in / p.w_scale).astype(jnp.int32))
-        lif, spikes = lif_step_fx(carry.lif, g_in, p, v_fx, force)
-    else:
-        lif, spikes = lif_step(carry.lif, g_units * p.w_scale, p, v_in, force)
+    sstate, drive = stim.step(carry.stim, keys[1:], t, U, p)
+    lif, spikes = apply_drive(carry.lif, g_units, drive, p, sc.fixed_point)
     spikes = jnp.logical_and(spikes, arrs.pad_mask)      # pad neurons inert
 
     ring = carry.ring.at[carry.ptr].set(spikes)
     ptr = (carry.ptr + 1) % p.delay_steps
-    new = DistCarry(lif=lif, ring=ring, ptr=ptr, key=key,
+    new = DistCarry(lif=lif, ring=ring, ptr=ptr, key=keys[0],
                     counts=carry.counts + spikes.astype(jnp.int32),
-                    dropped=carry.dropped + drop)
+                    dropped=carry.dropped + drop, stim=sstate)
     return new, None
 
 
@@ -242,13 +222,30 @@ def simulate_distributed(
     seed: int = 0,
     mesh: Mesh | None = None,
     emulate: bool = False,
+    stimulus=None,
 ) -> DistResult:
     """Run the partitioned network.  ``emulate=True`` uses vmap with
     spmd_axis_name on one device (semantics-identical); otherwise shard_map
-    over a "cores" mesh axis with one partition per device."""
+    over a "cores" mesh axis with one partition per device.
+
+    ``stimulus`` is any stateless :class:`repro.exp.Stimulus` addressed in
+    *original* neuron ids; it is sharded onto the partitioning here.  The
+    default reconstructs the legacy masked sugar-Poisson + background drive
+    from ``cfg.sim`` and ``sugar_neurons``.
+    """
+    from repro.exp.stimulus import legacy_stimulus, shard_stimulus
+
     P_, U = d.n_parts, d.part_size
-    arrs = build_dist_arrays(d, sugar_neurons)
+    arrs = build_dist_arrays(d)
     sc = cfg.sim
+    if stimulus is None:
+        stimulus = legacy_stimulus(sc, d.n_orig, sugar_idx=sugar_neurons,
+                                   masked=True)
+    elif sugar_neurons is not None:
+        raise ValueError(
+            "pass either sugar_neurons (legacy drive) or stimulus, "
+            "not both — an explicit stimulus ignores sugar_neurons")
+    stim = shard_stimulus(stimulus, d)
 
     lif0 = init_state(P_ * U, sc.params, sc.fixed_point)
     lif0 = jax.tree.map(lambda x: x.reshape(P_, U), lif0)
@@ -260,42 +257,45 @@ def simulate_distributed(
         key=keys,
         counts=jnp.zeros((P_, U), jnp.int32),
         dropped=jnp.zeros((P_,), jnp.int32),
+        stim=stim.init_state(U),
     )
 
     axis = "cores"
-    step = functools.partial(_dist_step, arrs=None, cfg=cfg, P_=P_, U=U,
-                             axis=axis)
 
-    def run_one(carry, arr):
+    def run_one(carry, arr, st):
         # scan over time on one device's partition
-        def body(c, _):
-            return _dist_step(c, None, arrs=arr, cfg=cfg, P_=P_, U=U,
+        def body(c, t):
+            return _dist_step(c, t, arrs=arr, stim=st, cfg=cfg, P_=P_, U=U,
                               axis=axis)
-        c, _ = jax.lax.scan(body, carry, None, length=t_steps)
+        c, _ = jax.lax.scan(body, carry,
+                            jnp.arange(t_steps, dtype=jnp.int32))
         return c
 
     if emulate:
         # vmap over the partition dim with a named axis -> collectives work
-        out = jax.jit(jax.vmap(run_one, in_axes=0, axis_name=axis))(carry0, arrs)
+        out = jax.jit(jax.vmap(run_one, in_axes=(0, 0, 0), axis_name=axis)
+                      )(carry0, arrs, stim)
     else:
         if mesh is None:
             mesh = make_core_mesh(P_)
         spec_carry = jax.tree.map(lambda _: P("cores"), carry0)
         spec_arr = jax.tree.map(lambda _: P("cores"), arrs)
+        spec_stim = jax.tree.map(lambda _: P("cores"), stim)
 
-        def sharded(carry, arr):
+        def sharded(carry, arr, st):
             carry = jax.tree.map(lambda x: x[0], carry)   # strip local P dim
             arr = jax.tree.map(lambda x: x[0], arr)
-            c = run_one(carry, arr)
+            st = jax.tree.map(lambda x: x[0], st)
+            c = run_one(carry, arr, st)
             return jax.tree.map(lambda x: x[None], c)
 
-        fn = shard_map(sharded, mesh=mesh, in_specs=(spec_carry, spec_arr),
+        fn = shard_map(sharded, mesh=mesh,
+                       in_specs=(spec_carry, spec_arr, spec_stim),
                        out_specs=spec_carry, check_rep=False)
-        out = jax.jit(fn)(carry0, arrs)
+        out = jax.jit(fn)(carry0, arrs, stim)
 
     counts_pu = np.asarray(out.counts).reshape(P_ * U)
     counts = np.zeros(d.n_orig, dtype=np.int64)
     valid = d.inv_perm >= 0
     counts[d.inv_perm[valid]] = counts_pu[valid]
-    del step
     return DistResult(counts=counts, dropped=int(np.asarray(out.dropped).sum()))

@@ -1,16 +1,20 @@
 """Connectome LIF simulation loop over pluggable delivery engines.
 
 Synaptic-delivery strategies live in :mod:`repro.core.engines` (one module
-per strategy, registered by name); this module owns everything engine-
-independent: the LIF state machine (float or fixed-point), the ring-buffer
-implementation of the uniform 1.8 ms synaptic delay, Poisson/background
-drive, and the scan over timesteps.
+per strategy, registered by name); stimulation and observability live in
+:mod:`repro.exp` (stimulus protocols, in-scan probes).  This module owns
+everything that is engine- and stimulus-independent: the LIF state machine
+(float or fixed-point), the ring-buffer implementation of the uniform
+1.8 ms synaptic delay, and the scan over timesteps.
 
-The whole run is a single jitted computation per (engine, config, t_steps)
-triple: device synaptic state is built once per :func:`simulate` call, the
-carry (ring buffer + LIF state + counters) is donated so XLA updates it in
-place across calls, and repeated calls with the same static signature skip
-retracing entirely — the property the benchmark harness relies on.
+The whole run is a single jitted computation per (engine, stimulus, config,
+probes, t_steps) signature: device synaptic state is built once per
+:func:`simulate` call, the carry (ring buffer + LIF state + counters +
+stimulus state) is donated so XLA updates it in place across calls, and
+repeated calls with the same static signature skip retracing entirely — the
+property the benchmark harness relies on.  :func:`repro.exp.run_trials`
+vmaps the same scan over a seed batch for the paper's trial-averaged
+statistics.
 """
 
 from __future__ import annotations
@@ -25,7 +29,7 @@ import numpy as np
 
 from .connectome import Connectome
 from .engines import available_engines, get_engine
-from .neuron import LIFParams, LIFState, init_state, lif_step, lif_step_fx
+from .neuron import LIFParams, LIFState, init_state
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,6 +38,8 @@ class SimConfig:
     engine: str = "csr"             # see repro.core.engines / docs/engines.md
     fixed_point: bool = False
     quantize_bits: Optional[int] = None   # 9 = Loihi; None = raw weights
+    # Legacy stimulus fields: consumed by repro.exp.stimulus.legacy_stimulus
+    # when simulate() is called without an explicit stimulus.
     poisson_to_v: bool = True       # True = Brian2 semantics; False = Loihi approx
     poisson_rate_hz: float = 150.0
     poisson_weight: float = 180.0   # weight units delivered per Poisson event
@@ -41,7 +47,7 @@ class SimConfig:
     spike_capacity: int = 512        # K: max active neurons per step (event)
     syn_budget: int = 65_536         # S_cap: max delivered synapses per step
     ell_width_cap: int = 4096        # SSD fan-in cap
-    collect_raster: bool = False
+    collect_raster: bool = False     # legacy alias for ProbeSpec(raster=True)
 
 
 def build_synapses(c: Connectome, cfg: SimConfig) -> Any:
@@ -64,6 +70,7 @@ class SimCarry(NamedTuple):
     key: jax.Array
     counts: jax.Array      # [n] int32 spike counts
     dropped: jax.Array     # scalar int32 total dropped synapse events
+    stim: Any              # stimulus state pytree (() for stateless stimuli)
 
 
 class SimResult(NamedTuple):
@@ -71,65 +78,91 @@ class SimResult(NamedTuple):
     state: LIFState
     dropped: jax.Array
     raster: jax.Array | None
+    records: dict          # ProbeSpec-selected [T, ...] arrays
 
 
-@functools.partial(jax.jit, static_argnums=(3, 4, 5),
-                   donate_argnums=(1,))
-def _run_scan(syn, carry: SimCarry, sugar_idx: jax.Array | None,
-              cfg: SimConfig, t_steps: int, n: int):
-    """One fused computation: scan `t_steps` LIF+delivery steps.
+def _scan_steps(syn, carry: SimCarry, stim, cfg: SimConfig, probes,
+                t_steps: int, n: int):
+    """Scan `t_steps` LIF+delivery steps; shared by the single-run and
+    vmapped-trials entry points.
 
-    ``syn`` is the engine state pytree (its static fields key the jit
-    cache), ``carry`` is donated so ring/LIF buffers are updated in place.
+    ``syn`` is the engine state pytree and ``stim`` the stimulus pytree
+    (their static fields key the jit cache); all stimulus-specific work —
+    Poisson drive, background spiking, clocked currents — flows through
+    ``stim.step``, all observability through ``probes.collect``.
     """
+    from repro.exp.stimulus import apply_drive, n_split
     p = cfg.params
     deliver = get_engine(cfg.engine).deliver
-    # Per-step constants, hoisted out of the step body once per trace.
-    p_sugar = cfg.poisson_rate_hz * p.dt * 1e-3
-    p_bg = cfg.background_rate_hz * p.dt * 1e-3
-    v_amp = p.v_th * 1.5
-    v_amp_fx = round(v_amp / p.w_scale)
+    nk = n_split(stim)   # legacy-compatible key layout; see exp.stimulus
 
-    def step(carry: SimCarry, _):
-        key, k_poisson, k_bg = jax.random.split(carry.key, 3)
+    def step(carry: SimCarry, t):
+        keys = jax.random.split(carry.key, nk)
         delayed = carry.ring[carry.ptr]
         g_units, drop = deliver(syn, delayed, cfg)
 
-        v_in = None
-        v_in_fx = None
-        force = None
-        if sugar_idx is not None:
-            # Draw only for the driven subset (|sugar| << n) and scatter.
-            draws = jax.random.bernoulli(
-                k_poisson, p_sugar, sugar_idx.shape)
-            if cfg.poisson_to_v:
-                if cfg.fixed_point:
-                    v_in_fx = jnp.zeros(n, jnp.int32).at[sugar_idx].set(
-                        draws.astype(jnp.int32) * v_amp_fx)
-                else:
-                    v_in = jnp.zeros(n, jnp.float32).at[sugar_idx].set(
-                        draws.astype(jnp.float32) * v_amp)
-            else:
-                g_units = g_units.at[sugar_idx].add(
-                    draws.astype(jnp.float32) * cfg.poisson_weight)
-        if cfg.background_rate_hz > 0:
-            force = jax.random.bernoulli(k_bg, p_bg, (n,))
-
-        if cfg.fixed_point:
-            g_in = jnp.round(g_units).astype(jnp.int32)
-            lif, spikes = lif_step_fx(carry.lif, g_in, p, v_in_fx, force)
-        else:
-            lif, spikes = lif_step(carry.lif, g_units * p.w_scale, p, v_in,
-                                   force)
+        sstate, drive = stim.step(carry.stim, keys[1:], t, n, p)
+        lif, spikes = apply_drive(carry.lif, g_units, drive, p,
+                                  cfg.fixed_point)
 
         ring = carry.ring.at[carry.ptr].set(spikes)
         ptr = (carry.ptr + 1) % p.delay_steps
         counts = carry.counts + spikes.astype(jnp.int32)
-        new = SimCarry(lif=lif, ring=ring, ptr=ptr, key=key, counts=counts,
-                       dropped=carry.dropped + drop.astype(jnp.int32))
-        return new, (spikes if cfg.collect_raster else None)
+        new = SimCarry(lif=lif, ring=ring, ptr=ptr, key=keys[0], counts=counts,
+                       dropped=carry.dropped + drop.astype(jnp.int32),
+                       stim=sstate)
+        return new, probes.collect(spikes=spikes, lif=lif, drop=drop, params=p)
 
-    return jax.lax.scan(step, carry, None, length=t_steps)
+    return jax.lax.scan(step, carry, jnp.arange(t_steps, dtype=jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnums=(3, 4, 5, 6), donate_argnums=(1,))
+def _run_scan(syn, carry: SimCarry, stim, cfg: SimConfig, probes,
+              t_steps: int, n: int):
+    return _scan_steps(syn, carry, stim, cfg, probes, t_steps, n)
+
+
+@functools.partial(jax.jit, static_argnums=(3, 4, 5, 6), donate_argnums=(1,))
+def _run_scan_trials(syn, carry: SimCarry, stim, cfg: SimConfig, probes,
+                     t_steps: int, n: int):
+    """Batched trials: vmap the scan over a leading seed/trial axis of the
+    carry; syn and stim are broadcast (shared across trials)."""
+    return jax.vmap(
+        lambda cy: _scan_steps(syn, cy, stim, cfg, probes, t_steps, n)
+    )(carry)
+
+
+def _init_carry(n: int, cfg: SimConfig, stimulus, seed: int) -> SimCarry:
+    return SimCarry(
+        lif=init_state(n, cfg.params, cfg.fixed_point),
+        ring=jnp.zeros((cfg.params.delay_steps, n), dtype=bool),
+        ptr=jnp.int32(0),
+        key=jax.random.PRNGKey(seed),
+        counts=jnp.zeros(n, jnp.int32),
+        dropped=jnp.int32(0),
+        stim=stimulus.init_state(n),
+    )
+
+
+def _resolve_stimulus(cfg: SimConfig, n: int, sugar_neurons, stimulus):
+    if stimulus is not None:
+        if sugar_neurons is not None:
+            raise ValueError(
+                "pass either sugar_neurons (legacy drive) or stimulus, "
+                "not both — an explicit stimulus ignores sugar_neurons")
+        return stimulus
+    from repro.exp.stimulus import legacy_stimulus
+    sugar_idx = None
+    if sugar_neurons is not None:
+        sugar_idx = np.asarray(sugar_neurons).astype(np.int32)
+    return legacy_stimulus(cfg, n, sugar_idx)
+
+
+def _resolve_probes(cfg: SimConfig, probes):
+    if probes is not None:
+        return probes
+    from repro.exp.probes import ProbeSpec
+    return ProbeSpec(raster=cfg.collect_raster)
 
 
 def simulate(
@@ -139,32 +172,30 @@ def simulate(
     sugar_neurons: np.ndarray | None = None,
     seed: int = 0,
     syn: Any | None = None,
+    stimulus: Any | None = None,
+    probes: Any | None = None,
 ) -> SimResult:
     """Run `t_steps` of the network; returns per-neuron spike counts (the
-    paper's validation statistic) and optionally the full raster.
+    paper's validation statistic) plus any probe records.
 
     ``cfg.engine`` selects a registered delivery engine (see
     :func:`repro.core.engines.available_engines`); ``syn`` optionally
-    supplies a prebuilt state from :func:`build_synapses`.
+    supplies a prebuilt state from :func:`build_synapses`.  ``stimulus``
+    is any :class:`repro.exp.Stimulus` (default: the legacy sugar-Poisson
+    + background drive reconstructed from ``cfg`` and ``sugar_neurons``);
+    ``probes`` is a :class:`repro.exp.ProbeSpec` (default: raster iff
+    ``cfg.collect_raster``).
     """
     n = c.n
     if syn is None:
         syn = build_synapses(c, cfg)
-    sugar_idx = None
-    if sugar_neurons is not None:
-        sugar_idx = jnp.asarray(np.asarray(sugar_neurons).astype(np.int32))
-
-    carry = SimCarry(
-        lif=init_state(n, cfg.params, cfg.fixed_point),
-        ring=jnp.zeros((cfg.params.delay_steps, n), dtype=bool),
-        ptr=jnp.int32(0),
-        key=jax.random.PRNGKey(seed),
-        counts=jnp.zeros(n, jnp.int32),
-        dropped=jnp.int32(0),
-    )
-    carry, raster = _run_scan(syn, carry, sugar_idx, cfg, t_steps, n)
+    stimulus = _resolve_stimulus(cfg, n, sugar_neurons, stimulus)
+    probes = _resolve_probes(cfg, probes)
+    carry = _init_carry(n, cfg, stimulus, seed)
+    carry, records = _run_scan(syn, carry, stimulus, cfg, probes, t_steps, n)
     return SimResult(counts=carry.counts, state=carry.lif,
-                     dropped=carry.dropped, raster=raster)
+                     dropped=carry.dropped, raster=records.get("raster"),
+                     records=records)
 
 
 def spike_rates_hz(counts: jax.Array, t_steps: int, dt_ms: float) -> jax.Array:

@@ -1,0 +1,25 @@
+"""Experiment subsystem: stimulus protocols, in-scan probes, trial batches,
+and the named-scenario registry.
+
+Layering: :mod:`repro.core` knows nothing about *which* experiment runs —
+its simulation loop exposes a stimulus hook and a probe hook; this package
+supplies the implementations.  See docs/experiments.md.
+"""
+
+from .probes import NO_PROBES, ProbeSpec
+from .scenarios import (Scenario, available_scenarios, build_scenario,
+                        get_scenario, register_scenario)
+from .stimulus import (SILENT, Background, Compose, PoissonDrive, PulseTrain,
+                       RampDrive, SkipKey, StepCurrent, StimDrive, Stimulus,
+                       legacy_stimulus, per_neuron, shard_stimulus)
+from .trials import TrialResult, run_trials
+
+__all__ = [
+    "NO_PROBES", "ProbeSpec",
+    "Scenario", "available_scenarios", "build_scenario", "get_scenario",
+    "register_scenario",
+    "SILENT", "Background", "Compose", "PoissonDrive", "PulseTrain",
+    "RampDrive", "SkipKey", "StepCurrent", "StimDrive", "Stimulus",
+    "legacy_stimulus", "per_neuron", "shard_stimulus",
+    "TrialResult", "run_trials",
+]

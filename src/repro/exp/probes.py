@@ -1,0 +1,73 @@
+"""In-scan probes: what the simulation's ``ys`` carry per step.
+
+The paper (§3.2.5) notes that spike probes significantly slow Loihi
+execution; here observability is a static :class:`ProbeSpec` that selects
+which records the jitted scan stacks — pay only for what you measure.
+``SimResult.records`` is a dict of ``[T, ...]`` arrays (``[B, T, ...]``
+under :func:`repro.exp.run_trials`):
+
+========== ======================= =====================================
+key        shape per step          meaning
+========== ======================= =====================================
+raster     [n] bool                full spike raster (legacy
+                                   ``collect_raster``)
+v          [len(voltage)]          membrane potential of the sampled
+                                   neuron subset, engine-native units
+                                   (mV float path, Q19.12 fixed point —
+                                   convert with ``neuron.fx_to_mv``)
+pop_rate_hz scalar float32         population mean firing rate this step
+dropped    scalar int32            synapse events lost to capacity limits
+========== ======================= =====================================
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ProbeSpec:
+    """Static (hashable) selection of per-step records; part of the jit
+    cache key, so changing probes retraces but never changes semantics."""
+
+    raster: bool = False
+    voltage: tuple[int, ...] = ()    # neuron ids whose v is traced
+    pop_rate: bool = False
+    drops: bool = False
+
+    def __post_init__(self):
+        object.__setattr__(self, "voltage", tuple(int(i) for i in self.voltage))
+
+    @property
+    def any(self) -> bool:
+        return bool(self.raster or self.voltage or self.pop_rate or self.drops)
+
+    def collect(self, *, spikes: jax.Array, lif, drop: jax.Array,
+                params) -> dict:
+        """Build this step's record dict (traced inside the scan body)."""
+        rec: dict = {}
+        if self.raster:
+            rec["raster"] = spikes
+        if self.voltage:
+            n = spikes.shape[0]
+            bad = [i for i in self.voltage if not 0 <= i < n]
+            if bad:
+                # jit-time check: JAX's clamping gather would otherwise
+                # silently return a different neuron's trace
+                raise ValueError(f"voltage probe ids {bad} out of range "
+                                 f"for n={n}")
+            rec["v"] = lif.v[jnp.asarray(self.voltage, dtype=jnp.int32)]
+        if self.pop_rate:
+            rec["pop_rate_hz"] = (
+                spikes.astype(jnp.float32).mean() / (params.dt * 1e-3))
+        if self.drops:
+            rec["dropped"] = drop.astype(jnp.int32)
+        return rec
+
+
+NO_PROBES = ProbeSpec()
+
+__all__ = ["NO_PROBES", "ProbeSpec"]

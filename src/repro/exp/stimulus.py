@@ -1,0 +1,425 @@
+"""Composable stimulus protocols: what drives the network each step.
+
+The paper's validation workload is one hard-coded scenario — Poisson drive
+onto the sugar-sensing population plus optional uniform background spiking.
+This module makes stimulation a first-class pluggable subsystem (the
+counterpart of the delivery-engine registry for *input* rather than
+*synapses*): a :class:`Stimulus` is a pytree (arrays are traced children,
+rates/windows are static aux data keying the jit cache) whose ``step``
+produces the per-step :class:`StimDrive` consumed by the simulation loop.
+
+Drive channels (all optional, combined additively / by OR):
+
+* ``v_mv``    — direct membrane drive in mV (Brian2-style Poisson semantics);
+* ``g_units`` — synaptic drive in integer weight units (Loihi approximation);
+* ``force``   — forced spikes this step (the scaling study's background).
+
+RNG contract: the simulation step splits its carry key into
+``1 + max(2, stimulus.n_keys)`` subkeys and hands ``keys[1:]`` to the
+stimulus.  :func:`legacy_stimulus` reconstructs the pre-subsystem inline
+drive with exactly the historical key layout (sugar Poisson consumes
+``keys[1]``, background consumes ``keys[2]``), so ``PoissonDrive`` is
+bit-identical — same seed, same counts — to the deleted sugar branch on
+both the float and fixed-point paths.
+
+Distributed use: :func:`shard_stimulus` converts any stimulus to its dense
+per-neuron ("masked") form and remaps every per-neuron leaf through a DCSR
+partitioning into partition-stacked ``[P, U]`` arrays, so the shard_map
+simulator consumes the same stimulus pytrees (stateless stimuli only).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engines.base import register_state, static_field
+from repro.core.neuron import LIFParams, lif_step, lif_step_fx, poisson_drive
+
+
+class StimDrive(NamedTuple):
+    """Per-step drive; ``None`` channels cost nothing in the trace."""
+
+    v_mv: jax.Array | None = None      # [n] float32 membrane drive, mV
+    g_units: jax.Array | None = None   # [n] float32 synaptic drive, weight units
+    force: jax.Array | None = None     # [n] bool forced spikes
+
+
+@runtime_checkable
+class Stimulus(Protocol):
+    """One stimulation strategy (see module docstring).
+
+    ``n_keys`` is the number of PRNG subkeys consumed per step (0 for
+    deterministic stimuli); ``step`` receives a ``[n_keys, ...]`` slice of
+    the per-step key split (index ``keys[0]`` in leaves).
+    """
+
+    n_keys: int
+
+    def init_state(self, n: int) -> Any:
+        """Per-run stimulus state pytree (``()`` for stateless stimuli)."""
+        ...
+
+    def step(self, state: Any, keys: jax.Array | None, t: jax.Array, n: int,
+             p: LIFParams) -> tuple[Any, StimDrive]:
+        ...
+
+    def to_masked(self, n: int) -> "Stimulus":
+        """Equivalent stimulus whose neuron selectors are dense ``[n]``
+        arrays (required for :func:`shard_stimulus`; may change the RNG
+        stream for scatter-mode stimuli)."""
+        ...
+
+
+def n_split(stim) -> int:
+    """Subkeys to split from the carry key each step: 1 (next carry) plus
+    one per stimulus key, floored at the historical 3-way split so every
+    legacy configuration keeps its exact PRNG stream.  Both the monolithic
+    and distributed step bodies call this — the key-layout contract lives
+    here only."""
+    return 1 + max(2, stim.n_keys)
+
+
+def apply_drive(lif, g_units: jax.Array, drive: StimDrive, p: LIFParams,
+                fixed_point: bool):
+    """Apply a :class:`StimDrive` to the delivered synaptic input and
+    integrate one LIF step -> ``(new_lif, spikes)``.
+
+    Shared by the monolithic and distributed step bodies so the
+    bit-compat-pinned arithmetic — g add before fixed-point rounding, the
+    Q19.12 conversion of ``v_mv`` — lives in exactly one place."""
+    if drive.g_units is not None:
+        g_units = g_units + drive.g_units
+    if fixed_point:
+        g_in = jnp.round(g_units).astype(jnp.int32)
+        v_fx = None
+        if drive.v_mv is not None:
+            v_fx = jnp.round(drive.v_mv / p.w_scale).astype(jnp.int32)
+        return lif_step_fx(lif, g_in, p, v_fx, drive.force)
+    return lif_step(lif, g_units * p.w_scale, p, drive.v_mv, drive.force)
+
+
+def per_neuron(sel, amp, n: int) -> jax.Array:
+    """Dense [n] float32 drive: ids or bool mask ``sel`` set to ``amp``."""
+    w = np.zeros(n, np.float32)
+    w[np.asarray(sel)] = amp
+    return jnp.asarray(w)
+
+
+def _by_target(target: str, arr: jax.Array) -> StimDrive:
+    if target == "v":
+        return StimDrive(v_mv=arr)
+    if target == "g":
+        return StimDrive(g_units=arr)
+    raise ValueError(f"unknown drive target {target!r} (want 'v' or 'g')")
+
+
+# --------------------------------------------------------------------------
+# Stochastic stimuli
+# --------------------------------------------------------------------------
+
+@register_state
+@dataclasses.dataclass(frozen=True)
+class PoissonDrive:
+    """Bernoulli(rate*dt) drive onto a population (the sugar experiment).
+
+    Scatter mode (``idx``) draws only for the driven subset — the exact
+    historical sugar branch.  Masked mode (``mask`` or neither) draws for
+    all n and masks — the distributed-friendly form (different RNG stream,
+    same distribution).  ``target='v'`` forces the membrane above threshold
+    (Brian2 semantics, amp = 1.5*v_th unless overridden); ``target='g'``
+    adds ``weight`` units of synaptic drive (Loihi approximation) — the
+    paper's Fig 13 ablation toggles exactly this.
+    """
+
+    idx: Any = None                               # [k] int32 target ids
+    mask: Any = None                              # [n] bool
+    rate_hz: float = static_field(default=150.0)
+    target: str = static_field(default="v")       # "v" | "g"
+    v_amp_mv: float | None = static_field(default=None)  # None -> 1.5*v_th
+    weight: float = static_field(default=180.0)   # g units per event
+
+    n_keys = 1
+
+    def init_state(self, n: int):
+        return ()
+
+    def step(self, state, keys, t, n, p):
+        prob = self.rate_hz * p.dt * 1e-3
+        amp = (1.5 * p.v_th) if self.v_amp_mv is None else self.v_amp_mv
+        if self.idx is not None:
+            draws = jax.random.bernoulli(keys[0], prob, self.idx.shape)
+            if self.target == "v":
+                v = jnp.zeros(n, jnp.float32).at[self.idx].set(
+                    draws.astype(jnp.float32) * amp)
+                return state, StimDrive(v_mv=v)
+            g = jnp.zeros(n, jnp.float32).at[self.idx].add(
+                draws.astype(jnp.float32) * self.weight)
+            return state, StimDrive(g_units=g)
+        draws = poisson_drive(keys[0], n, self.rate_hz, p.dt, self.mask)
+        if self.target == "v":
+            return state, StimDrive(v_mv=draws.astype(jnp.float32) * amp)
+        return state, StimDrive(g_units=draws.astype(jnp.float32) * self.weight)
+
+    def to_masked(self, n: int):
+        if self.idx is None:
+            mask = jnp.ones(n, bool) if self.mask is None else self.mask
+        else:
+            m = np.zeros(n, bool)
+            m[np.asarray(self.idx)] = True
+            mask = jnp.asarray(m)
+        return dataclasses.replace(self, idx=None, mask=mask)
+
+
+@register_state
+@dataclasses.dataclass(frozen=True)
+class Background:
+    """Probabilistic background spiking (the activity scaling study):
+    every unmasked neuron emits a forced spike with prob rate*dt."""
+
+    mask: Any = None                              # [n] bool, None = all
+    rate_hz: float = static_field(default=5.0)
+
+    n_keys = 1
+
+    def init_state(self, n: int):
+        return ()
+
+    def step(self, state, keys, t, n, p):
+        return state, StimDrive(
+            force=poisson_drive(keys[0], n, self.rate_hz, p.dt, self.mask))
+
+    def to_masked(self, n: int):
+        mask = jnp.ones(n, bool) if self.mask is None else self.mask
+        return dataclasses.replace(self, mask=mask)
+
+
+@register_state
+@dataclasses.dataclass(frozen=True)
+class SkipKey:
+    """Consume one PRNG subkey and drive nothing.
+
+    Placeholder reproducing the historical key layout: the old inline step
+    always split 3 keys even when a drive branch was absent, so e.g. a
+    background-only legacy run drew from ``keys[2]``.
+    """
+
+    n_keys = 1
+
+    def init_state(self, n: int):
+        return ()
+
+    def step(self, state, keys, t, n, p):
+        return state, StimDrive()
+
+    def to_masked(self, n: int):
+        return self
+
+
+# --------------------------------------------------------------------------
+# Deterministic (clocked) stimuli
+# --------------------------------------------------------------------------
+
+@register_state
+@dataclasses.dataclass(frozen=True)
+class StepCurrent:
+    """Constant drive ``weights`` during the window [t_on, t_off)."""
+
+    weights: Any                                   # [n] float32 amplitude
+    t_on: int = static_field(default=0)            # steps
+    t_off: int | None = static_field(default=None)
+    target: str = static_field(default="g")
+
+    n_keys = 0
+
+    def init_state(self, n: int):
+        return ()
+
+    def step(self, state, keys, t, n, p):
+        on = t >= self.t_on
+        if self.t_off is not None:
+            on = jnp.logical_and(on, t < self.t_off)
+        return state, _by_target(self.target, self.weights * on.astype(jnp.float32))
+
+    def to_masked(self, n: int):
+        return self
+
+
+@register_state
+@dataclasses.dataclass(frozen=True)
+class PulseTrain:
+    """Periodic pulses: ``width``-step pulses every ``period`` steps from
+    ``t_on``, optionally limited to ``n_pulses``."""
+
+    weights: Any
+    period: int = static_field(default=100)        # steps
+    width: int = static_field(default=5)           # steps
+    t_on: int = static_field(default=0)
+    n_pulses: int | None = static_field(default=None)
+    target: str = static_field(default="g")
+
+    n_keys = 0
+
+    def init_state(self, n: int):
+        return ()
+
+    def step(self, state, keys, t, n, p):
+        ph = t - self.t_on
+        on = ph >= 0
+        if self.n_pulses is not None:
+            on = jnp.logical_and(on, ph < self.n_pulses * self.period)
+        on = jnp.logical_and(on, ph % self.period < self.width)
+        return state, _by_target(self.target, self.weights * on.astype(jnp.float32))
+
+    def to_masked(self, n: int):
+        return self
+
+
+@register_state
+@dataclasses.dataclass(frozen=True)
+class RampDrive:
+    """Optogenetic-style windowed ramp: amplitude rises linearly from 0 to
+    ``weights`` over ``t_ramp`` steps starting at ``t_on``, holds, and cuts
+    off at ``t_off`` (None = never)."""
+
+    weights: Any
+    t_on: int = static_field(default=0)
+    t_ramp: int = static_field(default=100)        # steps to reach peak
+    t_off: int | None = static_field(default=None)
+    target: str = static_field(default="g")
+
+    n_keys = 0
+
+    def init_state(self, n: int):
+        return ()
+
+    def step(self, state, keys, t, n, p):
+        ph = t - self.t_on
+        frac = jnp.clip(ph.astype(jnp.float32) / max(self.t_ramp, 1), 0.0, 1.0)
+        gate = jnp.where(ph >= 0, frac, 0.0)
+        if self.t_off is not None:
+            gate = jnp.where(t < self.t_off, gate, 0.0)
+        return state, _by_target(self.target, self.weights * gate)
+
+    def to_masked(self, n: int):
+        return self
+
+
+# --------------------------------------------------------------------------
+# Composition
+# --------------------------------------------------------------------------
+
+@register_state
+@dataclasses.dataclass(frozen=True)
+class Compose:
+    """Combine stimuli: v/g drives add, forced spikes OR.  PRNG subkeys are
+    distributed to parts in declaration order (each part consumes
+    ``part.n_keys``), which is what makes legacy key layouts expressible."""
+
+    parts: tuple = ()
+
+    @property
+    def n_keys(self) -> int:
+        return sum(s.n_keys for s in self.parts)
+
+    def init_state(self, n: int):
+        return tuple(s.init_state(n) for s in self.parts)
+
+    def step(self, state, keys, t, n, p):
+        if len(state) != len(self.parts):
+            raise ValueError(
+                f"Compose state has {len(state)} entries for "
+                f"{len(self.parts)} parts — carry was not built from this "
+                f"stimulus's init_state()")
+        v = g = force = None
+        new_states = []
+        k0 = 0
+        for s, st in zip(self.parts, state):
+            ks = keys[k0:k0 + s.n_keys] if s.n_keys else None
+            k0 += s.n_keys
+            st2, d = s.step(st, ks, t, n, p)
+            new_states.append(st2)
+            if d.v_mv is not None:
+                v = d.v_mv if v is None else v + d.v_mv
+            if d.g_units is not None:
+                g = d.g_units if g is None else g + d.g_units
+            if d.force is not None:
+                force = d.force if force is None else jnp.logical_or(force, d.force)
+        return tuple(new_states), StimDrive(v_mv=v, g_units=g, force=force)
+
+    def to_masked(self, n: int):
+        return Compose(tuple(s.to_masked(n) for s in self.parts))
+
+
+SILENT = Compose(())   # no external drive at all (silent_baseline scenario)
+
+
+# --------------------------------------------------------------------------
+# Legacy reconstruction + distributed sharding
+# --------------------------------------------------------------------------
+
+def legacy_stimulus(cfg, n: int, sugar_idx=None, masked: bool = False) -> Compose:
+    """Reconstruct the pre-subsystem inline drive from SimConfig fields.
+
+    ``masked=False`` mirrors the monolithic ``_run_scan`` (scatter-mode
+    sugar Poisson iff ``sugar_idx`` given); ``masked=True`` mirrors the
+    distributed ``_dist_step`` (masked Poisson iff ``poisson_rate_hz > 0``,
+    mask possibly empty).  Both reproduce the historical key layout
+    bit-for-bit (see :class:`SkipKey`).
+    """
+    parts: list = []
+    if masked:
+        if cfg.poisson_rate_hz > 0:
+            m = np.zeros(n, bool)
+            if sugar_idx is not None:
+                m[np.asarray(sugar_idx)] = True
+            parts.append(PoissonDrive(
+                mask=jnp.asarray(m), rate_hz=cfg.poisson_rate_hz,
+                target="v" if cfg.poisson_to_v else "g",
+                weight=cfg.poisson_weight))
+    elif sugar_idx is not None:
+        parts.append(PoissonDrive(
+            idx=jnp.asarray(np.asarray(sugar_idx).astype(np.int32)),
+            rate_hz=cfg.poisson_rate_hz,
+            target="v" if cfg.poisson_to_v else "g",
+            weight=cfg.poisson_weight))
+    if cfg.background_rate_hz > 0:
+        if not parts:
+            parts.append(SkipKey())
+        parts.append(Background(rate_hz=cfg.background_rate_hz))
+    return Compose(tuple(parts))
+
+
+def shard_stimulus(stim, d):
+    """Remap a stimulus onto a DCSR partitioning for the shard_map path.
+
+    Converts to masked form, then turns every per-neuron leaf ``[..., n]``
+    into partition-stacked ``[..., P, U]`` via the DCSR renumbering (pad
+    neurons get zeros/False — exactly the pad masking the distributed step
+    applies to spikes).  Static aux data is untouched.
+    """
+    dense = stim.to_masked(d.n_orig)
+    P_, U = d.n_parts, d.part_size
+    inv = np.asarray(d.inv_perm)
+    safe = np.where(inv >= 0, inv, 0)
+
+    def remap(x):
+        x = np.asarray(x)
+        if x.ndim >= 1 and x.shape[-1] == d.n_orig:
+            out = np.where(inv >= 0, x[..., safe], np.zeros((), x.dtype))
+            return jnp.asarray(out.reshape(x.shape[:-1] + (P_, U)))
+        return jnp.asarray(x)
+
+    return jax.tree.map(remap, dense)
+
+
+__all__ = [
+    "Background", "Compose", "PoissonDrive", "PulseTrain", "RampDrive",
+    "SILENT", "SkipKey", "StepCurrent", "StimDrive", "Stimulus",
+    "apply_drive", "legacy_stimulus", "n_split", "per_neuron",
+    "shard_stimulus",
+]

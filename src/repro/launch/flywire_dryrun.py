@@ -48,8 +48,17 @@ def abstract_dist_arrays(d, n_glob):
         syn_w=sd((Pn, S), f32),
         out_indptr=sd((Pn, n_glob + 1), i32),
         out_tgt=sd((Pn, S), i32), out_w=sd((Pn, S), f32),
-        sugar_mask=sd((Pn, U), jnp.bool_), pad_mask=sd((Pn, U), jnp.bool_),
+        pad_mask=sd((Pn, U), jnp.bool_),
     )
+
+
+def abstract_stimulus(sim, Pn, U):
+    """The legacy masked sugar+background stimulus with abstract [P, U]
+    mask leaves (same pytree the concrete shard_stimulus path produces)."""
+    from repro.exp.stimulus import legacy_stimulus
+    stim = legacy_stimulus(sim, Pn * U, masked=True).to_masked(Pn * U)
+    sd = jax.ShapeDtypeStruct
+    return jax.tree.map(lambda _: sd((Pn, U), jnp.bool_), stim)
 
 
 def main():
@@ -85,6 +94,7 @@ def main():
                      spike_capacity=args.capacity, syn_budget=args.budget)
     Pn, U = d.n_parts, d.part_size
     arrs = abstract_dist_arrays(d, Pn * U)
+    stim = abstract_stimulus(fw.sim, Pn, U)
     from repro.core.neuron import LIFState
     sd = jax.ShapeDtypeStruct
     keys_aval = jax.eval_shape(
@@ -97,29 +107,35 @@ def main():
         key=keys_aval,
         counts=sd((Pn, U), jnp.int32),
         dropped=sd((Pn,), jnp.int32),
+        # state structure must match the stimulus (Compose.step zips them)
+        stim=stim.init_state(U),
     )
 
-    def run_window(carry_in, arr):
+    def run_window(carry_in, arr, st):
         carry_in = jax.tree.map(lambda x: x[0], carry_in)
         arr = jax.tree.map(lambda x: x[0], arr)
+        st = jax.tree.map(lambda x: x[0], st)
 
-        def body(cc, _):
-            return _dist_step(cc, None, arrs=arr, cfg=cfg, P_=Pn, U=U,
-                              axis="cores")
-        cc, _ = jax.lax.scan(body, carry_in, None, length=args.steps)
+        def body(cc, t):
+            return _dist_step(cc, t, arrs=arr, stim=st, cfg=cfg, P_=Pn,
+                              U=U, axis="cores")
+        cc, _ = jax.lax.scan(body, carry_in,
+                             jnp.arange(args.steps, dtype=jnp.int32))
         return jax.tree.map(lambda x: x[None], cc)
 
     spec_c = jax.tree.map(lambda _: P("cores"), carry)
     spec_a = jax.tree.map(lambda _: P("cores"), arrs)
-    fn = shard_map(run_window, mesh=mesh, in_specs=(spec_c, spec_a),
+    spec_s = jax.tree.map(lambda _: P("cores"), stim)
+    fn = shard_map(run_window, mesh=mesh, in_specs=(spec_c, spec_a, spec_s),
                    out_specs=spec_c, check_rep=False)
     sh_c = jax.tree.map(lambda s: NamedSharding(mesh, s), spec_c)
     sh_a = jax.tree.map(lambda s: NamedSharding(mesh, s), spec_a)
+    sh_s = jax.tree.map(lambda s: NamedSharding(mesh, s), spec_s)
 
     t1 = time.time()
     with mesh:
-        lowered = jax.jit(fn, in_shardings=(sh_c, sh_a),
-                          donate_argnums=0).lower(carry, arrs)
+        lowered = jax.jit(fn, in_shardings=(sh_c, sh_a, sh_s),
+                          donate_argnums=0).lower(carry, arrs, stim)
         compiled = lowered.compile()
     mem = compiled.memory_analysis()
     hlo = analyze_hlo(compiled.as_text())

@@ -1,12 +1,15 @@
 """FlyWire simulation driver (the paper's workload as a CLI).
 
     PYTHONPATH=src python -m repro.launch.simulate --scale smoke \
-        --engine event --trials 3
+        --scenario sugar_feeding --engine event --trials 3
     PYTHONPATH=src python -m repro.launch.simulate --scale full --parity
     PYTHONPATH=src python -m repro.launch.simulate --distributed --cores 4
 
---distributed partitions with the paper's greedy capacity scheme and runs
-the shard_map simulator (one partition per host device; set
+--scenario selects a registered stimulus scenario (repro.exp.scenarios);
+--trials > 1 runs a vmapped seed batch — one compiled call — and reports
+trial-averaged rates.  --distributed partitions with the paper's greedy
+capacity scheme and runs the shard_map simulator with the same stimulus
+pytree (one partition per host device; set
 XLA_FLAGS=--xla_force_host_platform_device_count=N first, or use
 --emulate).
 """
@@ -21,11 +24,12 @@ import numpy as np
 
 from repro.configs.flywire import CONFIG, CONFIG_1MS, SMOKE
 from repro.core import (CoreBudget, SimConfig, caps_from_budget,
-                        greedy_partition, parity, simulate,
+                        greedy_partition, parity, spike_rates_hz,
                         synthetic_flywire_cached)
 from repro.core.dcsr import build_dcsr
 from repro.core.distributed import DistConfig, simulate_distributed
-from repro.core.engine import spike_rates_hz
+from repro.exp import (available_scenarios, build_scenario, get_scenario,
+                       run_trials)
 
 
 def main():
@@ -35,10 +39,14 @@ def main():
     from repro.core import available_engines
     ap.add_argument("--engine", default="event",
                     choices=available_engines())
+    ap.add_argument("--scenario", default="sugar_feeding",
+                    choices=available_scenarios())
     ap.add_argument("--dt", type=float, default=0.1, choices=[0.1, 1.0])
     ap.add_argument("--trials", type=int, default=1)
     ap.add_argument("--t-ms", type=float, default=0.0)
-    ap.add_argument("--background-hz", type=float, default=0.0)
+    ap.add_argument("--background-hz", type=float, default=None,
+                    help="override the scenario's background_hz param "
+                         "(0 turns an always-on background off)")
     ap.add_argument("--parity", action="store_true",
                     help="compare against the float csr reference")
     ap.add_argument("--distributed", action="store_true")
@@ -52,13 +60,32 @@ def main():
     c = synthetic_flywire_cached(n=fw.n_neurons, seed=0,
                                  target_synapses=fw.target_synapses)
     print(f"[simulate] connectome: {c.stats()}")
-    sugar = fw.sugar_neurons()
     t_ms = args.t_ms or fw.t_sim_ms
-    cfg = dataclasses.replace(fw.sim, engine=args.engine,
-                              background_rate_hz=args.background_hz)
+    cfg = dataclasses.replace(fw.sim, engine=args.engine)
     t_steps = int(round(t_ms / cfg.params.dt))
+    dt_ms = cfg.params.dt
+
+    scen = get_scenario(args.scenario)
+    # FlyWireConfig stays the source of truth for the sugar population
+    # wherever the scenario exposes the matching params
+    overrides = {}
+    if "n_sugar" in scen.defaults:
+        overrides["n_sugar"] = fw.n_sugar
+    if "rate_hz" in scen.defaults:
+        overrides["rate_hz"] = fw.sugar_rate_hz
+    if args.background_hz is not None:
+        if "background_hz" in scen.defaults:
+            overrides["background_hz"] = args.background_hz
+        else:
+            print(f"[simulate] note: scenario {scen.name!r} takes no "
+                  f"background_hz; --background-hz ignored")
+    stim = build_scenario(args.scenario, c, cfg, **overrides)
+    print(f"[simulate] scenario {scen.name!r}: {scen.description}")
 
     if args.distributed:
+        if args.trials > 1:
+            print("[simulate] note: --trials is not batched on the "
+                  "distributed path; running a single trial")
         caps = caps_from_budget(CoreBudget.tpu_vmem(), "sar")
         p = greedy_partition(c, caps, scheme="sar")
         from repro.core.partition import pad_to_uniform
@@ -68,35 +95,36 @@ def main():
               f"(U={d.part_size}, S_max={d.s_max})")
         dcfg = DistConfig(sim=cfg, scheme="event")
         t0 = time.time()
-        res = simulate_distributed(d, dcfg, t_steps, sugar, seed=0,
-                                   emulate=args.emulate)
-        counts = res.counts
+        res = simulate_distributed(d, dcfg, t_steps, seed=0,
+                                   emulate=args.emulate, stimulus=stim)
+        mean_counts = res.counts.astype(np.float64)
+        dropped = res.dropped
         print(f"[simulate] {t_steps} steps in {time.time()-t0:.2f}s "
-              f"(dropped={res.dropped})")
+              f"(dropped={dropped})")
     else:
         t0 = time.time()
-        res = simulate(c, cfg, t_steps, sugar, seed=0)
-        counts = np.asarray(res.counts)
-        print(f"[simulate] {t_steps} steps in {time.time()-t0:.2f}s "
-              f"(dropped={int(res.dropped)})")
+        res = run_trials(c, cfg, t_steps, stimulus=stim, seeds=args.trials)
+        mean_counts = np.asarray(res.counts, np.float64).mean(axis=0)
+        dropped = int(np.asarray(res.dropped).sum())
+        print(f"[simulate] {args.trials} trial(s) x {t_steps} steps in "
+              f"{time.time()-t0:.2f}s (dropped={dropped})")
 
-    rates = counts / (t_ms * 1e-3)
+    rates = np.asarray(spike_rates_hz(mean_counts, t_steps, dt_ms))
     active = (rates > 0.5).sum()
-    print(f"[simulate] total spikes {int(counts.sum())}, "
+    print(f"[simulate] mean total spikes {mean_counts.sum():.1f}, "
           f"active neurons {active} ({active/c.n:.2%}), "
           f"mean active rate {rates[rates>0.5].mean() if active else 0:.1f} Hz")
 
     if args.parity:
         ref_cfg = SimConfig(engine="csr", params=cfg.params,
                             poisson_to_v=True)
-        trials_a = [np.asarray(simulate(c, ref_cfg, t_steps, sugar,
-                                        seed=10 + i).counts)
-                    for i in range(args.trials)]
-        trials_b = [np.asarray(simulate(c, cfg, t_steps, sugar,
-                                        seed=20 + i).counts)
-                    for i in range(args.trials)]
-        ra = np.stack(trials_a).mean(0) / (t_ms * 1e-3)
-        rb = np.stack(trials_b).mean(0) / (t_ms * 1e-3)
+        ref_stim = build_scenario(args.scenario, c, ref_cfg, **overrides)
+        ra = run_trials(c, ref_cfg, t_steps, stimulus=ref_stim,
+                        seeds=[10 + i for i in range(args.trials)]
+                        ).mean_rates_hz(t_steps, dt_ms)
+        rb = run_trials(c, cfg, t_steps, stimulus=stim,
+                        seeds=[20 + i for i in range(args.trials)]
+                        ).mean_rates_hz(t_steps, dt_ms)
         print("[simulate] parity vs float reference:",
               parity(ra, rb).summary())
 

@@ -1,10 +1,13 @@
 """Connectome container + synthetic generator (paper Figs 2-3 statistics)."""
 
+import os
+
 import numpy as np
 
 from conftest import given, requires_hypothesis, settings, st
 
-from repro.core import synthetic_flywire, from_edges
+from repro.core import (cache_path, from_edges, synthetic_flywire,
+                        synthetic_flywire_cached)
 from repro.core.connectome import _transpose_csr
 
 
@@ -46,6 +49,27 @@ def test_dense_matches_csr():
     dense = c.dense()
     fi = dense.astype(bool).sum(axis=1)
     np.testing.assert_array_equal(fi, c.fan_in)
+
+
+def test_cache_keyed_on_generator_kwargs(tmp_path, monkeypatch):
+    """Regression: the cache must not return a connectome built with a
+    different synapse budget (or any other generator kwarg)."""
+    monkeypatch.setenv("REPRO_CACHE", str(tmp_path))
+    assert cache_path(300, 1) != cache_path(300, 1, target_synapses=3000)
+    assert cache_path(300, 1, target_synapses=3000) == \
+        cache_path(300, 1, target_synapses=3000)
+    assert cache_path(300, 1, target_synapses=3000) != \
+        cache_path(300, 1, target_synapses=9000)
+    # kwarg-free calls keep the legacy filename
+    assert os.path.basename(cache_path(300, 1)) == "connectome_300_1.npz"
+
+    small = synthetic_flywire_cached(n=300, seed=1, target_synapses=3000)
+    big = synthetic_flywire_cached(n=300, seed=1, target_synapses=9000)
+    assert big.nnz > 2 * small.nnz          # no silent collision
+    again = synthetic_flywire_cached(n=300, seed=1, target_synapses=3000)
+    assert again.nnz == small.nnz
+    np.testing.assert_array_equal(again.in_indices, small.in_indices)
+    assert len(list(tmp_path.iterdir())) == 2
 
 
 @requires_hypothesis
