@@ -12,9 +12,16 @@ background-rate sweep is the ``activity_sweep`` scenario with
 ``background_hz`` as its parameter, and the ``engine_step.*`` steps/sec
 rows — the perf trajectory every optimisation PR is measured against
 (``--json BENCH_engine_step.json``) — now also cover stimulus diversity
-via per-scenario rows (``engine_step.<engine>.scenario.<name>``).  The
-spike-probe slowdown (paper §3.2.5) is reproduced via
-``ProbeSpec(raster=True)`` (per-step record stacking + host fetch)."""
+via per-scenario rows (``engine_step.<engine>.scenario.<name>``) and the
+fixed-rate n-scaling sweep (``engine_step.event.nscale.<n>``), which
+demonstrates the hierarchical-compaction claim: event-engine ms/step
+grows sublinearly in n at fixed sparse activity (cost O(n/B + K·B +
+S_cap), not O(n)).  The spike-probe slowdown (paper §3.2.5) is reproduced
+via ``ProbeSpec(raster=True)`` (per-step record stacking + host fetch).
+
+``smoke=True`` shrinks every scale knob to CI size: a harness-breakage
+canary (imports, retracing, capacity plumbing), not a measurement.
+"""
 
 from __future__ import annotations
 
@@ -33,6 +40,12 @@ from .common import row, timeit
 # dominates a CPU step — the regime where Table 1's scaling is measurable
 N, SYN, T = 60_000, 6_000_000, 100
 RATES = [0.5, 1.0, 2.0, 5.0, 10.0, 20.0, 40.0]
+# fixed-rate n-scaling sweep (event engine, sparsest rate): n grows at
+# constant mean fan-out, activity rate — and therefore the event path's
+# per-step budgets — stay fixed
+NSCALE = [15_000, 30_000, 60_000, 120_000]
+NSCALE_RATE = 0.5
+MEAN_FANOUT = 100
 # stimulus-diversity trajectory points (scenario name -> params);
 # sugar_feeding rows are reused from the table1.sugar block, not re-timed
 SCENARIOS = {
@@ -41,19 +54,19 @@ SCENARIOS = {
 }
 
 
-def _run_sim(c, cfg, syn, stim, probes=None):
-    res = simulate(c, cfg, T, seed=0, syn=syn, stimulus=stim, probes=probes)
+def _run_sim(c, cfg, syn, stim, t_steps, probes=None):
+    res = simulate(c, cfg, t_steps, seed=0, syn=syn, stimulus=stim,
+                   probes=probes)
     jax.block_until_ready(res.counts)
     return res
 
 
 def engines_for(c, rate_hz):
-    cap, budget = auto_capacity(c, max(rate_hz, 0.5))
+    caps = auto_capacity(c, max(rate_hz, 0.5))
     engines = {
         "csr(conventional)": SimConfig(engine="csr"),
         "event(loihi-like)": SimConfig(engine="event",
-                                       spike_capacity=cap,
-                                       syn_budget=budget),
+                                       **caps.as_config_kwargs()),
         "binned(SAR)": SimConfig(engine="binned", quantize_bits=9),
     }
     if jax.default_backend() == "tpu":
@@ -64,8 +77,12 @@ def engines_for(c, rate_hz):
     return engines
 
 
-def run(full: bool = False):
-    c = synthetic_flywire_cached(n=N, seed=0, target_synapses=SYN)
+def run(full: bool = False, smoke: bool = False):
+    n, syn_n, t_steps = (2_000, 60_000, 20) if smoke else (N, SYN, T)
+    rates = [0.5, 40.0] if smoke else RATES
+    nscale = [1_000, 2_000] if smoke else NSCALE
+
+    c = synthetic_flywire_cached(n=n, seed=0, target_synapses=syn_n)
     rows = []
     if jax.default_backend() != "tpu":
         rows.append(row("engine_step.blocked.skipped", "cpu-backend",
@@ -77,36 +94,64 @@ def run(full: bool = False):
     for name, cfg in engines_for(c, 0.5).items():
         stim = build_scenario("sugar_feeding", c, cfg)
         syn = build_synapses(c, cfg)
-        res = _run_sim(c, cfg, syn, stim)
-        t = timeit(lambda: _run_sim(c, cfg, syn, stim))
+        res = _run_sim(c, cfg, syn, stim, t_steps)
+        t = timeit(lambda: _run_sim(c, cfg, syn, stim, t_steps))
         rows.append(row(f"table1.sugar.{name}", f"{t*1e3:.1f}ms",
-                        f"{T} steps of dt=0.1ms dropped="
+                        f"{t_steps} steps of dt=0.1ms dropped="
                         f"{int(res.dropped)}"))
         rows.append(row(f"engine_step.{cfg.engine}.scenario.sugar_feeding",
-                        f"{T/t:.1f}",
-                        f"steps/sec ({t/T*1e3:.3f} ms/step, n={c.n}, "
+                        f"{t_steps/t:.1f}",
+                        f"steps/sec ({t/t_steps*1e3:.3f} ms/step, n={c.n}, "
                         f"dropped={int(res.dropped)})"))
 
     # --- background-rate sweep through the activity_sweep scenario;
     #     engine_step.<engine>.<rate>hz is the perf trajectory ---
     times = {}
-    for rate in RATES:
+    for rate in rates:
         for name, base in engines_for(c, rate).items():
             cfg = dataclasses.replace(base, poisson_rate_hz=0.0)
             stim = build_scenario("activity_sweep", c, cfg,
                                   background_hz=rate)
             syn = build_synapses(c, cfg)
-            res = _run_sim(c, cfg, syn, stim)
-            t = timeit(lambda: _run_sim(c, cfg, syn, stim), iters=2)
+            res = _run_sim(c, cfg, syn, stim, t_steps)
+            t = timeit(lambda: _run_sim(c, cfg, syn, stim, t_steps), iters=2)
             times[(name, rate)] = t
             rows.append(row(f"table1.{rate}hz.{name}", f"{t*1e3:.1f}ms",
                             f"dropped={int(res.dropped)} "
                             f"scenario=activity_sweep"))
             engine = base.engine
             rows.append(row(f"engine_step.{engine}.{rate}hz",
-                            f"{T/t:.1f}",
-                            f"steps/sec ({t/T*1e3:.3f} ms/step, n={c.n}, "
-                            f"scenario=activity_sweep)"))
+                            f"{t_steps/t:.1f}",
+                            f"steps/sec ({t/t_steps*1e3:.3f} ms/step, "
+                            f"n={c.n}, scenario=activity_sweep)"))
+
+    # --- fixed-rate n-scaling sweep: the sublinear sparse path.  At a
+    #     fixed sparse rate the hierarchical compaction's budgets stop
+    #     growing with n, so event ms/step must grow far slower than n ---
+    ms_by_n = {}
+    for n_i in nscale:
+        ci = synthetic_flywire_cached(n=n_i, seed=0,
+                                      target_synapses=MEAN_FANOUT * n_i)
+        caps = auto_capacity(ci, NSCALE_RATE)
+        cfg = SimConfig(engine="event", poisson_rate_hz=0.0,
+                        **caps.as_config_kwargs())
+        stim = build_scenario("activity_sweep", ci, cfg,
+                              background_hz=NSCALE_RATE)
+        syn = build_synapses(ci, cfg)
+        res = _run_sim(ci, cfg, syn, stim, t_steps)
+        t = timeit(lambda: _run_sim(ci, cfg, syn, stim, t_steps), iters=2)
+        ms_by_n[n_i] = t / t_steps * 1e3
+        rows.append(row(f"engine_step.event.nscale.{n_i}",
+                        f"{t_steps/t:.1f}",
+                        f"steps/sec ({t/t_steps*1e3:.3f} ms/step, n={n_i}, "
+                        f"rate={NSCALE_RATE}hz, K={caps.spike_capacity}, "
+                        f"S_cap={caps.syn_budget}, "
+                        f"dropped={int(res.dropped)})"))
+    n0, n1 = nscale[0], nscale[-1]
+    rows.append(row("nscale.event.ms_growth",
+                    f"{ms_by_n[n1]/ms_by_n[n0]:.2f}x",
+                    f"event ms/step growth over {n1/n0:.0f}x n at "
+                    f"{NSCALE_RATE}hz (sublinear: << n ratio)"))
 
     # --- stimulus diversity: steps/sec per registry scenario ---
     for scen, params in SCENARIOS.items():
@@ -115,12 +160,12 @@ def run(full: bool = False):
             cfg = base
             stim = build_scenario(scen, c, cfg, **params)
             syn = build_synapses(c, cfg)
-            res = _run_sim(c, cfg, syn, stim)
-            t = timeit(lambda: _run_sim(c, cfg, syn, stim), iters=2)
+            res = _run_sim(c, cfg, syn, stim, t_steps)
+            t = timeit(lambda: _run_sim(c, cfg, syn, stim, t_steps), iters=2)
             rows.append(row(f"engine_step.{base.engine}.scenario.{scen}",
-                            f"{T/t:.1f}",
-                            f"steps/sec ({t/T*1e3:.3f} ms/step, n={c.n}, "
-                            f"dropped={int(res.dropped)})"))
+                            f"{t_steps/t:.1f}",
+                            f"steps/sec ({t/t_steps*1e3:.3f} ms/step, "
+                            f"n={c.n}, dropped={int(res.dropped)})"))
 
     # --- the paper's headline ratios ---
     for rate in (0.5, 40.0):
@@ -144,9 +189,9 @@ def run(full: bool = False):
     syn = build_synapses(c, cfg)
     raster = ProbeSpec(raster=True)
     t_probe = timeit(lambda: np.asarray(
-        simulate(c, cfg, T, seed=0, syn=syn, stimulus=stim,
+        simulate(c, cfg, t_steps, seed=0, syn=syn, stimulus=stim,
                  probes=raster).raster), iters=2)
-    t_free = timeit(lambda: _run_sim(c, cfg, syn, stim), iters=2)
+    t_free = timeit(lambda: _run_sim(c, cfg, syn, stim, t_steps), iters=2)
     rows.append(row("probe.slowdown", f"{t_probe/t_free:.2f}x",
                     "raster probe vs counters-only (paper: probes "
                     "significantly slow execution)"))

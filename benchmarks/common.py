@@ -1,7 +1,10 @@
 """Shared benchmark utilities."""
 
 import json
+import os
 import platform
+import re
+import socket
 import time
 
 import numpy as np
@@ -30,9 +33,37 @@ def row(name, value, derived=""):
     return (name, value, derived)
 
 
-def write_json(path: str, results: dict, full: bool) -> None:
+def host_identity() -> dict:
+    """Hostname + CPU model + physical core count.  Stamped into every
+    BENCH_*.json so trajectory points from different machines can't be
+    silently compared (steps/sec is only meaningful same-host)."""
+    model, physical = "", None
+    try:
+        with open("/proc/cpuinfo") as f:
+            info = f.read()
+        m = re.search(r"^model name\s*:\s*(.+)$", info, re.M)
+        model = m.group(1).strip() if m else ""
+        cores = {(p.group(1), c.group(1))
+                 for blk in info.split("\n\n")
+                 if (p := re.search(r"^physical id\s*:\s*(\d+)$", blk, re.M))
+                 and (c := re.search(r"^core id\s*:\s*(\d+)$", blk, re.M))}
+        physical = len(cores) or None
+    except OSError:
+        pass
+    return {
+        "hostname": socket.gethostname(),
+        "cpu_model": model or platform.processor(),
+        "physical_cores": physical or os.cpu_count(),
+        "logical_cpus": os.cpu_count(),
+    }
+
+
+def write_json(path: str, results: dict, full: bool,
+               smoke: bool = False) -> None:
     """Persist benchmark rows machine-readably so every perf PR leaves a
-    comparable trajectory point (BENCH_*.json convention)."""
+    comparable trajectory point (BENCH_*.json convention).  ``smoke`` is
+    stamped so CI-tiny canary runs can never be mistaken for (or compared
+    against) real trajectory points."""
     import jax
 
     payload = {
@@ -41,7 +72,9 @@ def write_json(path: str, results: dict, full: bool) -> None:
             "backend": jax.default_backend(),
             "jax": jax.__version__,
             "platform": platform.platform(),
+            "host": host_identity(),
             "full": full,
+            "smoke": smoke,
         },
         "benchmarks": {
             name: [{"name": n, "value": v, "derived": d}

@@ -1,0 +1,142 @@
+"""Hierarchical active-set compaction and the shared bounded ragged gather.
+
+The event-driven delivery paths (monolithic ``event`` engine and the
+distributed ``event`` comm scheme) both reduce a boolean spike vector to a
+fixed-capacity list of active indices and then ragged-gather those indices'
+fan-out synapse runs into a bounded slot budget.  This module is the single
+home for both primitives.
+
+Why hierarchical compaction
+---------------------------
+``jnp.where(spikes, size=K)`` is an O(n) inclusive cumsum over the full
+vector every step — at n=60k it dominates the sparse-activity step (~2.7 ms
+of a ~4.5 ms step on CPU) even when only a handful of neurons spiked.
+:func:`two_level_active` instead
+
+1. reduces spikes to a per-block any-spike mask (``block`` = 128 lanes,
+   matching the blocked engine's tile granularity) — a vectorized O(n)
+   reduce, ~100x cheaper than the O(n) scan;
+2. compacts the O(n/128) block ids with a bounded ``where`` over the mask;
+3. compacts *within only the gathered active blocks* — a bounded ``where``
+   over ``block_capacity * block`` elements.
+
+Per-step compaction cost is O(n/B + B_cap·B) instead of O(n): sublinear in
+n once activity (and hence ``block_capacity``) stops growing with it.
+
+Capacity overruns — more active blocks than ``block_capacity``, more active
+neurons than ``spike_capacity``, more fan-out synapses than the slot budget
+— are never silent: callers combine :func:`active_fanout_total` (the exact
+requested-synapse count) with the delivered count to report exact drops.
+
+Slot->owner assignment
+----------------------
+``owner[s] = #{k : seg_end[k] <= s}`` equals
+``searchsorted(seg_end, slot, side="right")`` but is computed by scattering
+a unit bump at each segment end and taking an inclusive cumsum over the
+budget — O(S_cap + K) sequential-friendly work instead of the
+O(S_cap · log K) gather-heavy probe per slot.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+BLOCK = 128   # compaction granularity; matches the blocked engine's tile
+
+
+def n_blocks(n: int, block: int = BLOCK) -> int:
+    """Number of ``block``-sized blocks covering ``n`` lanes (ceil div)."""
+    return -(-n // block)
+
+
+def derived_block_capacity(n: int, spike_capacity: int,
+                           block: int = BLOCK) -> int:
+    """Default block budget when a config leaves it 0: every active neuron
+    could land in its own block, so ``spike_capacity`` blocks always
+    suffice (capped at the total block count)."""
+    return max(1, min(n_blocks(n, block), spike_capacity))
+
+
+def two_level_active(spikes: jnp.ndarray, spike_capacity: int,
+                     block_capacity: int, block: int = BLOCK) -> jnp.ndarray:
+    """Compact spiking indices into ``[spike_capacity]`` int32, ascending,
+    with ``fill = n`` marking unused slots.
+
+    Selection under overflow is hierarchical-prefix: the first
+    ``block_capacity`` active blocks (by block id), then the first
+    ``spike_capacity`` active neurons (by id) within those blocks.  With
+    sufficient capacity this equals ``jnp.where(spikes, size=K, fill=n)``
+    exactly; under overflow the kept set is still ascending and
+    deterministic, so drop accounting stays exact and reproducible.
+    """
+    n = spikes.shape[0]
+    nb = n_blocks(n, block)
+    spp = jnp.pad(spikes, (0, nb * block - n)).reshape(nb, block)
+    bmask = jnp.any(spp, axis=1)
+    bids = jnp.where(bmask, size=block_capacity, fill_value=nb)[0]
+    bids = bids.astype(jnp.int32)
+    bvalid = bids < nb
+    # gather only the active blocks; invalid slots contribute no spikes
+    sub = jnp.logical_and(spp[jnp.minimum(bids, nb - 1)], bvalid[:, None])
+    loc = jnp.where(sub.reshape(-1), size=spike_capacity,
+                    fill_value=block_capacity * block)[0].astype(jnp.int32)
+    lvalid = loc < block_capacity * block
+    b = jnp.minimum(loc // block, block_capacity - 1)
+    gid = bids[b] * block + loc % block
+    return jnp.where(lvalid, gid, n).astype(jnp.int32)
+
+
+def slot_owner(seg_end: jnp.ndarray, syn_budget: int) -> jnp.ndarray:
+    """owner[s] = #{k : seg_end[k] <= s} for s in [0, syn_budget) — equal to
+    ``searchsorted(seg_end, slot, side="right")`` but computed by scattering
+    a unit bump at each segment end and taking an inclusive cumsum:
+    O(S_cap + K) instead of O(S_cap · log K)."""
+    bump = jnp.zeros(syn_budget + 1, jnp.int32).at[
+        jnp.minimum(seg_end, syn_budget)].add(1)
+    return jnp.cumsum(bump[:syn_budget])
+
+
+def ragged_slots(ids: jnp.ndarray, indptr: jnp.ndarray, syn_budget: int, *,
+                 invalid_from: int, gather_size: int):
+    """Assign the fan-out synapse runs of compacted ``ids`` to a bounded
+    flat slot budget.
+
+    ``ids`` is a ``[K]`` compacted index list (from
+    :func:`two_level_active` or an all-gather of such lists) where any
+    value ``>= invalid_from`` marks an unused slot.  ``indptr`` is the
+    ``[invalid_from + 1]`` CSR row-pointer array of the synapse store the
+    caller will gather from; ``gather_size`` bounds the produced indices
+    (the store's first-axis length).
+
+    Returns ``(syn_ix [S_cap] i32, ok [S_cap] bool, total i32)``: gather
+    indices per slot, slot validity, and the total synapse count requested
+    by the valid ids (``total - sum(ok)`` synapses were dropped to the
+    budget).  Cost: O(S_cap + K), independent of the store size.
+    """
+    k = ids.shape[0]
+    valid = ids < invalid_from
+    safe = jnp.minimum(ids, invalid_from - 1)
+    starts = jnp.where(valid, indptr[safe], 0)
+    lens = jnp.where(valid, indptr[safe + 1] - indptr[safe], 0)
+    seg_end = jnp.cumsum(lens)
+    total = seg_end[-1]
+    owner = slot_owner(seg_end, syn_budget)
+    owner_c = jnp.minimum(owner, k - 1)
+    prev_end = jnp.where(owner_c > 0, seg_end[owner_c - 1], 0)
+    slot = jnp.arange(syn_budget, dtype=jnp.int32)
+    syn_ix = jnp.clip(starts[owner_c] + slot - prev_end, 0, gather_size - 1)
+    ok = slot < jnp.minimum(total, syn_budget)
+    return syn_ix, ok, total
+
+
+def active_fanout_total(spikes: jnp.ndarray, indptr: jnp.ndarray):
+    """Exact number of synapses the spike vector *requests* — the
+    drop-accounting ground truth (requested - delivered = dropped), immune
+    to what the bounded compaction kept.  One vectorized O(n) multiply-add,
+    no scan/scatter."""
+    fo = indptr[1:] - indptr[:-1]
+    return jnp.sum(jnp.where(spikes, fo, 0))
+
+
+__all__ = ["BLOCK", "active_fanout_total", "derived_block_capacity",
+           "n_blocks", "ragged_slots", "slot_owner", "two_level_active"]

@@ -13,6 +13,11 @@ two communication schemes mirroring the paper's:
   per target core per spike; on a TPU mesh the all_gather of K event slots is
   the collective-native equivalent).  Comm volume ∝ activity (K ids/step);
   delivery cost ∝ events × their local fan-out (bounded by a synapse budget).
+  The per-partition compaction and the bounded ragged gather are the same
+  :mod:`repro.core.compaction` primitives the monolithic event engine runs
+  (hierarchical O(U/128 + B_cap·128) compaction, shared ``ragged_slots``),
+  and drops — budget overruns *and* spikes beyond the event capacity — are
+  counted exactly in synapse units via the prebuilt global fan-out table.
 
 Every partition is computationally self-contained except for the spike
 exchange — exactly the paper's framing of the edge cut as a sparse,
@@ -39,7 +44,8 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from .engines.event import slot_owner
+from .compaction import (derived_block_capacity, ragged_slots,
+                         two_level_active)
 from .dcsr import DCSR
 from .engine import SimConfig
 from .neuron import LIFState, init_state
@@ -62,6 +68,10 @@ class DistArrays(NamedTuple):
     out_tgt: jax.Array        # [P, S] int32 local target; pad = U
     out_w: jax.Array          # [P, S] float32
     pad_mask: jax.Array       # [P, U] bool — True for real neurons
+    src_gfo: jax.Array        # [P, U] int32 global fan-out of local sources
+                              # (sum of their synapse runs over all
+                              # partitions) — exact drop accounting for
+                              # spikes beyond the event capacity
 
 
 def build_dist_arrays(d: DCSR) -> DistArrays:
@@ -89,6 +99,10 @@ def build_dist_arrays(d: DCSR) -> DistArrays:
     real = d.inv_perm.reshape(P_, U) >= 0
     pad[:] = real
 
+    # global fan-out per source neuron = its local synapse-run length summed
+    # over every partition's source-major indptr
+    gfo = np.diff(out_indptr, axis=1).sum(axis=0).astype(np.int32)  # [P*U]
+
     return DistArrays(
         syn_src=jnp.asarray(d.syn_src),
         syn_tgt=jnp.asarray(d.syn_tgt_local),
@@ -97,6 +111,7 @@ def build_dist_arrays(d: DCSR) -> DistArrays:
         out_tgt=jnp.asarray(out_tgt),
         out_w=jnp.asarray(out_w),
         pad_mask=jnp.asarray(pad),
+        src_gfo=jnp.asarray(gfo.reshape(P_, U)),
     )
 
 
@@ -116,21 +131,13 @@ def _deliver_bitmap(spk_global: jax.Array, arr_src, arr_tgt, arr_w, U: int
 def _deliver_events(events: jax.Array, out_indptr, out_tgt, out_w,
                     U: int, n_glob: int, syn_budget: int
                     ) -> tuple[jax.Array, jax.Array]:
-    """events: [E] global ids (pad = n_glob).  Bounded ragged gather."""
-    E = events.shape[0]
-    ev = jnp.minimum(events, n_glob - 1)
-    valid_ev = events < n_glob
-    starts = jnp.where(valid_ev, out_indptr[ev], 0)
-    lens = jnp.where(valid_ev, out_indptr[ev + 1] - out_indptr[ev], 0)
-    seg_end = jnp.cumsum(lens)
-    total = seg_end[-1]
-    slot = jnp.arange(syn_budget, dtype=jnp.int32)
-    owner = slot_owner(seg_end, syn_budget)
-    owner_c = jnp.minimum(owner, E - 1)
-    prev_end = jnp.where(owner_c > 0, seg_end[owner_c - 1], 0)
-    within = slot - prev_end
-    syn_ix = jnp.clip(starts[owner_c] + within, 0, out_tgt.shape[0] - 1)
-    ok = slot < jnp.minimum(total, syn_budget)
+    """events: [E] global ids (pad = n_glob).  Bounded ragged gather via the
+    shared :func:`repro.core.compaction.ragged_slots` — the same code path
+    the monolithic event engine runs, applied to the all-gathered event
+    list against this partition's source-major local store."""
+    syn_ix, ok, total = ragged_slots(
+        events, out_indptr, syn_budget,
+        invalid_from=n_glob, gather_size=out_tgt.shape[0])
     contrib = jnp.where(ok, out_w[syn_ix], 0.0)
     tgt = jnp.where(ok, out_tgt[syn_ix], U)
     g = jax.ops.segment_sum(contrib, tgt, num_segments=U + 1)[:U]
@@ -157,6 +164,7 @@ class DistConfig:
     scheme: str = "event"        # "bitmap" | "event"
     spike_capacity: int = 256    # K per partition (event scheme)
     syn_budget: int = 32_768     # per-partition synapse budget per step
+    block_capacity: int = 0      # active 128-blocks per partition (0=derive)
 
 
 def _dist_step(carry: DistCarry, t, *, arrs: DistArrays, stim,
@@ -177,16 +185,22 @@ def _dist_step(carry: DistCarry, t, *, arrs: DistArrays, stim,
                                   arrs.syn_w, U)
         drop = jnp.int32(0)
     elif cfg.scheme == "event":
-        idx = jnp.where(delayed, size=cfg.spike_capacity, fill_value=U)[0]
+        bcap = cfg.block_capacity or derived_block_capacity(
+            U, cfg.spike_capacity)
+        idx = two_level_active(delayed, cfg.spike_capacity, bcap)
         my = jax.lax.axis_index(axis)
         gid = jnp.where(idx < U, idx + my * U, n_glob).astype(jnp.int32)
         events = jax.lax.all_gather(gid, axis).reshape(-1)   # [P*K]
         g_units, drop = _deliver_events(events, arrs.out_indptr, arrs.out_tgt,
                                         arrs.out_w, U, n_glob, cfg.syn_budget)
-        # spikes beyond the per-partition event capacity are dropped too
-        over_cap = jnp.maximum(
-            delayed.sum().astype(jnp.int32) - cfg.spike_capacity, 0)
-        drop = drop.astype(jnp.int32) + over_cap
+        # Spikes beyond the per-partition event capacity never enter any
+        # partition's event list; count their *global* fan-out as dropped
+        # synapses (exact, same units as the budget drops): requested minus
+        # the fan-out of the spikes actually kept by the compaction.
+        req_fo = jnp.sum(jnp.where(delayed, arrs.src_gfo, 0))
+        kept_fo = jnp.sum(jnp.where(
+            idx < U, arrs.src_gfo[jnp.minimum(idx, U - 1)], 0))
+        drop = drop.astype(jnp.int32) + (req_fo - kept_fo)
     else:
         raise ValueError(cfg.scheme)
 

@@ -46,6 +46,7 @@ class SimConfig:
     background_rate_hz: float = 0.0  # scaling-study probabilistic spiking
     spike_capacity: int = 512        # K: max active neurons per step (event)
     syn_budget: int = 65_536         # S_cap: max delivered synapses per step
+    block_capacity: int = 0          # B_cap: max active 128-blocks (0=derive)
     ell_width_cap: int = 4096        # SSD fan-in cap
     collect_raster: bool = False     # legacy alias for ProbeSpec(raster=True)
 

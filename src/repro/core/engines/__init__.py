@@ -23,11 +23,11 @@ from .blocked import BlockedEngine, BlockedState
 from .csr import CsrEngine, CsrState
 from .dense import DenseEngine, DenseState
 from .ell import EllEngine, EllState
-from .event import EventEngine, EventState, auto_capacity
+from .event import Capacity, EventEngine, EventState, auto_capacity
 
 __all__ = [
     "DeliveryEngine", "available_engines", "get_engine", "register",
-    "register_state", "static_field", "auto_capacity",
+    "register_state", "static_field", "Capacity", "auto_capacity",
     "BinnedEngine", "BinnedState", "BlockedEngine", "BlockedState",
     "CsrEngine", "CsrState", "DenseEngine", "DenseState",
     "EllEngine", "EllState", "EventEngine", "EventState",

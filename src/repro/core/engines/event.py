@@ -1,30 +1,41 @@
 """Event engine: active-set event-driven delivery (the Loihi-like path).
 
-Compacts spiking neurons into a fixed-capacity index list, ragged-gathers
-their fan-out synapse ranges into a bounded synapse budget, and
-scatter-adds into targets.  Cost ∝ activity — the paper's "performance
-advantages increase with sparser activity" path.  Capacity overruns are
-*counted* (``dropped``), never silent.
+Compacts spiking neurons into a fixed-capacity index list via the
+block-hierarchical compaction in :mod:`repro.core.compaction`, ragged-gathers
+their fan-out synapse ranges into a bounded synapse budget, and scatter-adds
+into targets.  Cost ∝ activity — the paper's "performance advantages
+increase with sparser activity" path.
 
-The slot->owner assignment (which active neuron does flat slot ``s``
-deliver for?) is the hot part.  It equals
-``searchsorted(seg_end, slot, side="right")`` but is computed here by
-scattering a unit bump at each segment end and taking an inclusive cumsum
-over the budget — O(S_cap + K) sequential-friendly work instead of the
-O(S_cap · log K) gather-heavy probe per slot.
+Per-step cost is O(n/B + B_cap·B + S_cap) where B = 128 (the compaction
+block), B_cap = ``block_capacity`` and S_cap = ``syn_budget`` — the only
+O(n) work left is vectorized elementwise (the block any-reduce and the
+drop-accounting fan-out dot), not the O(n) compaction scan the flat
+``jnp.where(spikes, size=K)`` used to pay regardless of activity.
+
+Capacity overruns are *counted* (``dropped``), never silent — including
+spikes beyond ``spike_capacity``/``block_capacity``, whose whole fan-out is
+reported as dropped synapses (exact: requested − delivered, with the
+requested total computed from the full spike vector).
 """
 
 from __future__ import annotations
 
 import dataclasses
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..compaction import (BLOCK, active_fanout_total, derived_block_capacity,
+                          n_blocks, ragged_slots, slot_owner,
+                          two_level_active)
 from ..compress import quantize_weights
 from ..connectome import Connectome
 from .base import register, register_state, static_field
+
+__all__ = ["Capacity", "EventEngine", "EventState", "auto_capacity",
+           "slot_owner"]   # slot_owner re-exported from core.compaction
 
 
 @register_state
@@ -36,27 +47,72 @@ class EventState:
     n: int = static_field(default=0)
 
 
+class Capacity(NamedTuple):
+    """Joint static-shape provisioning for the event path (see
+    :func:`auto_capacity`).  Field names match the ``SimConfig`` /
+    ``DistConfig`` knobs, so ``SimConfig(engine="event",
+    **cap.as_config_kwargs())`` wires all three."""
+
+    spike_capacity: int     # K: active-neuron slots per step
+    syn_budget: int         # S_cap: delivered-synapse slots per step
+    block_capacity: int     # B_cap: active 128-blocks per step
+
+    def as_config_kwargs(self) -> dict:
+        return self._asdict()
+
+
 def auto_capacity(c: Connectome, rate_hz: float, dt_ms: float = 0.1,
-                  margin: float = 4.0) -> tuple[int, int]:
-    """Provision (spike_capacity, syn_budget) for an expected activity level
-    — the static-shape analogue of Loihi's 'work ~ actual spike count'.
-    The engine still *counts* drops, so under-provisioning is observable."""
+                  margin: float = 4.0, fanout: str = "p99.9",
+                  block: int = BLOCK) -> Capacity:
+    """Provision the event path's static budgets for an expected activity
+    level — the static-shape analogue of Loihi's 'work ~ actual spike
+    count'.  The engine still *counts* drops, so under-provisioning is
+    observable.
+
+    The three budgets are derived jointly from one provisioned spike level
+    ``Kp = margin × expected spikes/step``:
+
+    * ``spike_capacity`` = ``Kp`` floored at 64 (quiet networks keep burst
+      headroom — the slot list is cheap);
+    * ``block_capacity`` = ``Kp`` 128-blocks (spikes can never occupy more
+      blocks than their count), floored at 32 and capped at the total
+      block count — this bounds the within-block compaction scan;
+    * ``syn_budget`` = ``Kp`` mean fan-outs + a ``margin``-scaled
+      Poisson-fluctuation term (√Kp·std) + a hub cushion for heavy-tailed
+      fan-out.  ``fanout`` picks the cushion: a percentile string
+      (``"p99"``, ``"p99.9"``, ...), ``"max"`` (never drop on a single
+      hub), or ``"mean"`` for the legacy ``cap·mean·margin`` formula,
+      which both under-provisions simultaneous hub spikes *and*
+      over-provisions the common case by ~margin² (the margin already in
+      ``spike_capacity`` gets multiplied in again).
+
+    The budgets directly price the per-step O(B_cap·128 + S_cap) slot
+    work, so tight joint provisioning is itself the perf optimisation;
+    drops stay exactly counted, so any residual under-provisioning is
+    observable rather than silent.
+    """
     exp_spikes = max(1.0, c.n * rate_hz * dt_ms * 1e-3)
-    cap = int(max(64, min(c.n, margin * exp_spikes)))
-    mean_fo = max(1.0, c.nnz / c.n)
-    budget = int(max(4096, cap * mean_fo * margin))
-    return cap, budget
-
-
-def slot_owner(seg_end: jax.Array, syn_budget: int) -> jax.Array:
-    """owner[s] = #{k : seg_end[k] <= s} for s in [0, syn_budget) — equal to
-    ``searchsorted(seg_end, slot, side="right")`` but computed by scattering
-    a unit bump at each segment end and taking an inclusive cumsum:
-    O(S_cap + K) instead of O(S_cap · log K).  Shared with the distributed
-    simulator's bounded ragged gather."""
-    bump = jnp.zeros(syn_budget + 1, jnp.int32).at[
-        jnp.minimum(seg_end, syn_budget)].add(1)
-    return jnp.cumsum(bump[:syn_budget])
+    kp = margin * exp_spikes
+    cap = int(max(64, min(c.n, kp)))
+    fo = np.diff(c.out_indptr)
+    if fanout == "mean":
+        mean_fo = max(1.0, c.nnz / c.n)
+        budget = int(max(4096, cap * mean_fo * margin))
+    else:
+        if fanout == "max":
+            hub = float(fo.max()) if c.nnz else 0.0
+        elif fanout.startswith("p"):
+            hub = float(np.percentile(fo, float(fanout[1:]))) if c.nnz else 0.0
+        else:
+            raise ValueError(
+                f"unknown fanout statistic {fanout!r} "
+                "(want 'mean', 'max', or a percentile like 'p99.9')")
+        budget = int(max(4096, kp * fo.mean()
+                         + margin * np.sqrt(kp) * fo.std() + hub))
+    budget = min(budget, max(4096, int(c.nnz)))
+    bcap = max(1, min(n_blocks(c.n, block), max(32, int(np.ceil(kp)))))
+    return Capacity(spike_capacity=cap, syn_budget=budget,
+                    block_capacity=bcap)
 
 
 @register
@@ -74,25 +130,15 @@ class EventEngine:
 
     def deliver(self, state: EventState, spikes: jax.Array, cfg):
         n = state.n
-        capacity, syn_budget = cfg.spike_capacity, cfg.syn_budget
-        (act_idx,) = jnp.where(spikes, size=capacity, fill_value=n)
-        ai = jnp.minimum(act_idx, n - 1)
-        valid_neuron = act_idx < n
-        starts = jnp.where(valid_neuron, state.out_indptr[ai], 0)
-        fo = jnp.where(valid_neuron,
-                       state.out_indptr[ai + 1] - state.out_indptr[ai], 0)
-        seg_end = jnp.cumsum(fo)
-        total = seg_end[-1]
-        owner = slot_owner(seg_end, syn_budget)
-        slot = jnp.arange(syn_budget, dtype=jnp.int32)
-        owner_c = jnp.minimum(owner, capacity - 1)
-        prev_end = jnp.where(owner_c > 0, seg_end[owner_c - 1], 0)
-        within = slot - prev_end
-        syn_ix = jnp.clip(starts[owner_c] + within, 0,
-                          state.out_tgt.shape[0] - 1)
-        valid = slot < jnp.minimum(total, syn_budget)
-        contrib = jnp.where(valid, state.out_w[syn_ix], 0.0)
-        tgt = jnp.where(valid, state.out_tgt[syn_ix], n)
+        bcap = cfg.block_capacity or derived_block_capacity(
+            n, cfg.spike_capacity)
+        act_idx = two_level_active(spikes, cfg.spike_capacity, bcap)
+        syn_ix, ok, total = ragged_slots(
+            act_idx, state.out_indptr, cfg.syn_budget,
+            invalid_from=n, gather_size=state.out_tgt.shape[0])
+        contrib = jnp.where(ok, state.out_w[syn_ix], 0.0)
+        tgt = jnp.where(ok, state.out_tgt[syn_ix], n)
         g = jax.ops.segment_sum(contrib, tgt, num_segments=n + 1)[:n]
-        dropped = jnp.maximum(total - syn_budget, 0)
-        return g, dropped
+        requested = active_fanout_total(spikes, state.out_indptr)
+        delivered = jnp.minimum(total, cfg.syn_budget)
+        return g, requested - delivered

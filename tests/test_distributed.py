@@ -63,6 +63,69 @@ def test_event_capacity_drop_accounting(setup):
     assert r.dropped > 0
 
 
+def test_distributed_event_overflow_exact_vs_numpy(setup):
+    """Single-step overflow contract for the sharded event path: per
+    partition, the delivered subset must agree with the flat local store on
+    every non-dropped synapse, and the summed drop count (budget overruns +
+    the global fan-out of spikes beyond the event capacity) must match a
+    numpy reference exactly."""
+    from repro.core.compaction import derived_block_capacity, two_level_active
+    from repro.core.distributed import _deliver_events, build_dist_arrays
+    from test_compaction import np_two_level
+
+    c, _, d = setup
+    P_, U = d.n_parts, d.part_size
+    n_glob = P_ * U
+    arrs = build_dist_arrays(d)
+    indptr = np.asarray(arrs.out_indptr)
+    out_tgt, out_w = np.asarray(arrs.out_tgt), np.asarray(arrs.out_w)
+    gfo = np.asarray(arrs.src_gfo)
+
+    rng = np.random.default_rng(5)
+    delayed = rng.random((P_, U)) < 0.05
+    delayed &= np.asarray(arrs.pad_mask)
+
+    for cap, budget in [(4, 64), (16, 300), (256, 32_768)]:
+        bcap = derived_block_capacity(U, cap)
+        # per-partition compaction -> the all-gathered global event list
+        gids = []
+        for p in range(P_):
+            idx = np.asarray(two_level_active(delayed[p], cap, bcap))
+            np.testing.assert_array_equal(
+                idx, np_two_level(delayed[p], cap, bcap))
+            gids.append(np.where(idx < U, idx + p * U, n_glob))
+        events = np.concatenate(gids).astype(np.int32)
+
+        total_drop = 0
+        for p in range(P_):
+            g, bdrop = _deliver_events(
+                events, arrs.out_indptr[p], arrs.out_tgt[p], arrs.out_w[p],
+                U, n_glob, budget)
+            flat = np.concatenate(
+                [np.arange(indptr[p][e], indptr[p][e + 1])
+                 for e in events if e < n_glob] or [np.array([], int)])
+            g_ref = np.zeros(U + 1, np.float64)
+            np.add.at(g_ref, out_tgt[p][flat[:budget]],
+                      out_w[p][flat[:budget]])
+            np.testing.assert_array_equal(np.asarray(g), g_ref[:U])
+            assert int(bdrop) == max(len(flat) - budget, 0)
+            kept = np.asarray(gids[p])
+            kept = kept[kept < n_glob] - p * U
+            over_fo = int(gfo[p][delayed[p]].sum()) - int(gfo[p][kept].sum())
+            total_drop += max(len(flat) - budget, 0) + over_fo
+
+        # numpy ground truth: requested global fan-out of every delayed
+        # spike minus what the event lists + budgets actually delivered
+        requested = int(gfo[delayed].sum())
+        delivered = 0
+        for p in range(P_):
+            tot = sum(int(indptr[p][e + 1] - indptr[p][e])
+                      for e in events if e < n_glob)
+            delivered += min(tot, budget)
+        assert total_drop == requested - delivered
+    assert total_drop == 0   # the generous provisioning dropped nothing
+
+
 SHARD_MAP_SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"

@@ -65,17 +65,80 @@ def test_event_auto_capacity_matches_csr_exactly(net):
     under-provisioned budget on the same workload reports every loss."""
     c, _ = net
     rate = 40.0
-    cap, budget = auto_capacity(c, rate)
+    cap = auto_capacity(c, rate)
     base = dict(background_rate_hz=rate, poisson_rate_hz=0.0)
     ref = simulate(c, SimConfig(engine="csr", **base), 200, None, seed=2)
-    out = simulate(c, SimConfig(engine="event", spike_capacity=cap,
-                                syn_budget=budget, **base), 200, None, seed=2)
+    out = simulate(c, SimConfig(engine="event", **cap.as_config_kwargs(),
+                                **base), 200, None, seed=2)
     assert int(out.dropped) == 0
     np.testing.assert_array_equal(np.asarray(ref.counts),
                                   np.asarray(out.counts))
-    starved = simulate(c, SimConfig(engine="event", spike_capacity=cap,
+    starved = simulate(c, SimConfig(engine="event",
+                                    spike_capacity=cap.spike_capacity,
                                     syn_budget=64, **base), 200, None, seed=2)
     assert int(starved.dropped) > 0
+
+
+@pytest.mark.parametrize("rate", [0.5, 2.0, 10.0, 40.0])
+def test_auto_capacity_lossless_at_every_sweep_rate(net, rate):
+    """The percentile-aware joint provisioning must leave the event engine
+    lossless (dropped == 0) across the whole activity sweep — the regime
+    where the legacy mean-fan-out budget could silently starve on
+    simultaneous hub spikes."""
+    c, _ = net
+    cap = auto_capacity(c, rate)
+    out = simulate(c, SimConfig(engine="event", background_rate_hz=rate,
+                                poisson_rate_hz=0.0,
+                                **cap.as_config_kwargs()), 200, None, seed=4)
+    assert int(out.dropped) == 0
+
+
+def test_auto_capacity_fanout_statistics():
+    c = synthetic_flywire(n=1500, target_synapses=45_000, seed=3)
+    mean = auto_capacity(c, 5.0, fanout="mean")
+    p99 = auto_capacity(c, 5.0, fanout="p99")
+    mx = auto_capacity(c, 5.0, fanout="max")
+    assert mean.spike_capacity == p99.spike_capacity == mx.spike_capacity
+    assert mx.syn_budget >= p99.syn_budget   # bigger hub cushion
+    assert p99.block_capacity >= 1
+    with pytest.raises(ValueError, match="fanout statistic"):
+        auto_capacity(c, 5.0, fanout="median")
+
+
+def test_event_overflow_drops_exact_and_prefix_delivered(net):
+    """Overflow contract: with starved budgets the event engine must (a)
+    report *exactly* the synapses it failed to deliver — including the
+    fan-out of spikes beyond spike/block capacity, which the flat
+    compaction used to drop silently — and (b) deliver a subset that
+    agrees with dense on every non-dropped synapse."""
+    from repro.core.engine import build_synapses
+    from repro.core.engines import get_engine
+    from test_compaction import np_two_level
+
+    c, _ = net
+    rng = np.random.default_rng(0)
+    spikes = np.zeros(c.n, bool)
+    spikes[rng.choice(c.n, 40, replace=False)] = True
+    fo = np.diff(c.out_indptr)
+    requested = int(fo[spikes].sum())
+
+    for cap, bcap, budget in [(8, 2, 64), (16, 4, 128), (64, 64, 10**6)]:
+        cfg = SimConfig(engine="event", spike_capacity=cap, syn_budget=budget,
+                        block_capacity=bcap)
+        syn = build_synapses(c, cfg)
+        g, dropped = get_engine("event").deliver(syn, np.asarray(spikes), cfg)
+
+        kept = np_two_level(spikes, cap, bcap)
+        kept = kept[kept < c.n]
+        syn_flat = np.concatenate(
+            [np.arange(c.out_indptr[i], c.out_indptr[i + 1]) for i in kept]
+            or [np.array([], int)])[:budget]
+        g_ref = np.zeros(c.n, np.float64)
+        np.add.at(g_ref, c.out_indices[syn_flat], c.out_weights[syn_flat])
+        np.testing.assert_array_equal(np.asarray(g), g_ref)
+        assert int(dropped) == requested - len(syn_flat)
+    # the unstarved case delivered everything
+    assert requested - len(syn_flat) == 0
 
 
 def test_fixed_point_engine_close_to_float(net):
