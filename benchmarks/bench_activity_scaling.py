@@ -18,6 +18,10 @@ demonstrates the hierarchical-compaction claim: event-engine ms/step
 grows sublinearly in n at fixed sparse activity (cost O(n/B + K·B +
 S_cap), not O(n)).  The spike-probe slowdown (paper §3.2.5) is reproduced
 via ``ProbeSpec(raster=True)`` (per-step record stacking + host fetch).
+The distributed exchange schemes (``engine_step.dist.<scheme>.P4``,
+vmap-emulated on one device) extend the trajectory across the partition
+cut; the sharded ``blocked`` row additionally records the tile-gating
+metric (tiles skipped/step ∝ sparsity).
 
 ``smoke=True`` shrinks every scale knob to CI size: a harness-breakage
 canary (imports, retracing, capacity plumbing), not a measurement.
@@ -46,6 +50,15 @@ RATES = [0.5, 1.0, 2.0, 5.0, 10.0, 20.0, 40.0]
 NSCALE = [15_000, 30_000, 60_000, 120_000]
 NSCALE_RATE = 0.5
 MEAN_FANOUT = 100
+# distributed exchange-scheme rows (vmap-emulated, one host device):
+# bitmap/event run at the bench n so dist.P4 vs monolithic overhead is
+# readable; the blocked scheme times its interpret-mode fallback, so it
+# runs at a small n and its row is about the tiles-skipped gating metric,
+# not speed (compiled tile path is TPU-only, like the monolithic row)
+DIST_P = 4
+DIST_RATE = 0.5
+DIST_BLOCKED_N = 2_000
+DIST_BLOCKED_RATES = (0.5, 40.0)
 # stimulus-diversity trajectory points (scenario name -> params);
 # sugar_feeding rows are reused from the table1.sugar block, not re-timed
 SCENARIOS = {
@@ -152,6 +165,63 @@ def run(full: bool = False, smoke: bool = False):
                     f"{ms_by_n[n1]/ms_by_n[n0]:.2f}x",
                     f"event ms/step growth over {n1/n0:.0f}x n at "
                     f"{NSCALE_RATE}hz (sublinear: << n ratio)"))
+
+    # --- distributed exchange schemes (unified step core, emulated P=4):
+    #     engine_step.dist.<scheme>.P4 extends the trajectory across the
+    #     partition cut ---
+    from repro.core.dcsr import build_dcsr
+    from repro.core.distributed import DistConfig, simulate_distributed
+    from repro.core.partition import even_partition
+
+    dist_t = 10 if smoke else 50
+    d = build_dcsr(c, even_partition(c, DIST_P))
+    caps = auto_capacity(c, DIST_RATE)
+    sim = SimConfig(engine="csr", poisson_rate_hz=0.0,
+                    **caps.as_config_kwargs())
+    stim = build_scenario("activity_sweep", c, sim, background_hz=DIST_RATE)
+    for scheme in ("bitmap", "event"):
+        dcfg = DistConfig(sim=sim, scheme=scheme, capacity=caps)
+
+        def run_dist(dcfg=dcfg):
+            return simulate_distributed(d, dcfg, dist_t, None, seed=0,
+                                        emulate=True, stimulus=stim)
+        res = run_dist()
+        t = timeit(run_dist, iters=2)
+        rows.append(row(f"engine_step.dist.{scheme}.P{DIST_P}",
+                        f"{dist_t/t:.1f}",
+                        f"steps/sec ({t/dist_t*1e3:.3f} ms/step, n={c.n}, "
+                        f"P={DIST_P} emulated, rate={DIST_RATE}hz, "
+                        f"dropped={int(res.dropped)})"))
+
+    nb = 1_000 if smoke else DIST_BLOCKED_N
+    cb = synthetic_flywire_cached(n=nb, seed=0, target_synapses=30 * nb)
+    db = build_dcsr(cb, even_partition(cb, DIST_P))
+    capsb = auto_capacity(cb, max(DIST_BLOCKED_RATES))
+    tiles = {}
+    t_blk = None
+    for rate in DIST_BLOCKED_RATES:
+        simb = SimConfig(engine="csr", poisson_rate_hz=0.0,
+                         **capsb.as_config_kwargs())
+        stimb = build_scenario("activity_sweep", cb, simb, background_hz=rate)
+        dcfgb = DistConfig(sim=simb, scheme="blocked", capacity=capsb)
+
+        def run_blk(dcfgb=dcfgb, stimb=stimb):
+            return simulate_distributed(db, dcfgb, dist_t, None, seed=0,
+                                        emulate=True, stimulus=stimb)
+        res = run_blk()
+        tiles[rate] = (int(res.stats["tiles_live"]),
+                       int(res.stats["tiles_skipped"]))
+        if rate == min(DIST_BLOCKED_RATES):
+            t_blk = timeit(run_blk, iters=1)
+    stored = sum(tiles[min(DIST_BLOCKED_RATES)]) // dist_t
+    skipped = {r: tiles[r][1] / dist_t for r in DIST_BLOCKED_RATES}
+    lo, hi = min(DIST_BLOCKED_RATES), max(DIST_BLOCKED_RATES)
+    rows.append(row(f"engine_step.dist.blocked.P{DIST_P}",
+                    f"{dist_t/t_blk:.1f}",
+                    f"steps/sec interpret-mode (n={nb}, P={DIST_P} emulated; "
+                    f"tiles skipped/step of {stored} stored: "
+                    f"{skipped[lo]:.0f} @{lo}hz vs {skipped[hi]:.0f} @{hi}hz "
+                    f"— skip ∝ sparsity; compiled tile path is TPU-only)"))
 
     # --- stimulus diversity: steps/sec per registry scenario ---
     for scen, params in SCENARIOS.items():

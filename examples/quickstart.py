@@ -9,6 +9,7 @@ import numpy as np
 from repro.core import (SimConfig, available_engines, parity, simulate,
                         synthetic_flywire)
 from repro.core.engine import spike_rates_hz
+from repro.exp import PoissonDrive
 
 # 1. a reduced connectome with the paper's degree/weight statistics
 c = synthetic_flywire(n=5000, target_synapses=150_000, seed=0)
@@ -16,16 +17,18 @@ print("connectome:", c.stats())
 print("registered delivery engines:", available_engines())
 
 # 2. sugar-neuron experiment: 20 Poisson-driven inputs at 150 Hz
-sugar = np.arange(20)
+sugar = np.arange(20, dtype=np.int32)
 T = 1000                      # 100 ms at dt=0.1ms
 
 # conventional flat delivery (Brian2-like reference)
-ref = simulate(c, SimConfig(engine="csr"), T, sugar, seed=1)
+ref = simulate(c, SimConfig(engine="csr"), T, seed=1,
+               stimulus=PoissonDrive(idx=sugar, rate_hz=150.0))
 # event-driven delivery with 9-bit quantized weights + fixed-point LIF
-# (the Loihi 2 hardware path)
+# (the Loihi 2 hardware path): Poisson as synaptic drive, not membrane
 hw = simulate(c, SimConfig(engine="event", quantize_bits=9,
-                           fixed_point=True, poisson_to_v=False),
-              T, sugar, seed=1)
+                           fixed_point=True),
+              T, seed=1,
+              stimulus=PoissonDrive(idx=sugar, rate_hz=150.0, target="g"))
 ra = np.asarray(spike_rates_hz(ref.counts, T, 0.1))
 rb = np.asarray(spike_rates_hz(hw.counts, T, 0.1))
 print("reference active neurons:", int((ra > 0.5).sum()))
@@ -36,8 +39,11 @@ print("parity(ref, hw):", parity(ra, rb).summary())
 # interpret mode, which unrolls every stored tile at trace time, so the
 # demo uses a reduced network; the compiled TPU path handles full scale.
 c_small = synthetic_flywire(n=1500, target_synapses=45_000, seed=0)
-s_ref = simulate(c_small, SimConfig(engine="csr"), 200, sugar, seed=1)
-s_blk = simulate(c_small, SimConfig(engine="blocked"), 200, sugar, seed=1)
+stim = PoissonDrive(idx=sugar, rate_hz=150.0)
+s_ref = simulate(c_small, SimConfig(engine="csr"), 200, seed=1,
+                 stimulus=stim)
+s_blk = simulate(c_small, SimConfig(engine="blocked"), 200, seed=1,
+                 stimulus=stim)
 print("blocked == csr spike counts:",
       bool(np.array_equal(np.asarray(s_ref.counts),
                           np.asarray(s_blk.counts))))

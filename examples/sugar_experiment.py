@@ -15,7 +15,7 @@ from repro.core import (CoreBudget, SimConfig, caps_from_budget,
 from repro.core.dcsr import build_dcsr, edge_cut
 from repro.core.distributed import DistConfig, simulate_distributed
 from repro.core.partition import pad_to_uniform, partition_report
-from repro.exp import run_trials
+from repro.exp import PoissonDrive, run_trials
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--cores", type=int, default=4)
@@ -24,7 +24,7 @@ args = ap.parse_args()
 
 n, syn = (139_255, 15_000_000) if args.full else (10_000, 300_000)
 c = synthetic_flywire_cached(n=n, seed=0, target_synapses=syn)
-sugar = np.arange(20)
+sugar = np.arange(20, dtype=np.int32)
 print("connectome:", c.stats())
 
 # --- compression statistics (paper Fig 7) ---
@@ -43,14 +43,18 @@ print("dcsr:", edge_cut(d))
 sim = SimConfig(engine="csr", quantize_bits=9, fixed_point=True,
                 poisson_to_v=False)
 T = 1000
+# Poisson as synaptic drive (Loihi approximation) — addressed in original
+# neuron ids; simulate_distributed shards it onto the partitioning
+stim = PoissonDrive(idx=sugar, rate_hz=150.0, target="g")
 res = simulate_distributed(d, DistConfig(sim=sim, scheme="event"), T,
-                           sugar, seed=0, emulate=True)
+                           seed=0, emulate=True, stimulus=stim)
 print(f"distributed sim: {int(res.counts.sum())} spikes, "
       f"dropped {res.dropped}")
 
 # --- parity vs the monolithic float reference (paper Figs 6/12):
 # a vmapped 3-trial batch, one compiled call (repro.exp.run_trials) ---
-ref = run_trials(c, SimConfig(engine="csr"), T, sugar, seeds=[5, 6, 7])
+ref = run_trials(c, SimConfig(engine="csr"), T, seeds=[5, 6, 7],
+                 stimulus=PoissonDrive(idx=sugar, rate_hz=150.0))
 ra = ref.mean_rates_hz(T, 0.1)
 rb = res.counts / (T * 0.1e-3)
 print("parity:", parity(ra, rb).summary())

@@ -1,0 +1,81 @@
+"""One capacity vocabulary for every event-driven path.
+
+The static-shape budgets of the sparse paths — active-neuron slots,
+delivered-synapse slots, active 128-block slots — used to live twice, as
+three loose fields each on ``SimConfig`` and ``DistConfig`` with different
+defaults.  :class:`CapacityConfig` is now the single carrier: the
+monolithic ``event`` engine, every distributed exchange scheme, and
+:func:`repro.core.engines.auto_capacity` all consume it.  The legacy
+per-field knobs survive as deprecated constructor shims on both configs
+(see :func:`merge_legacy_capacity`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+
+
+@dataclasses.dataclass(frozen=True)
+class CapacityConfig:
+    """Joint static-shape provisioning for the event-driven paths.
+
+    ``spike_capacity`` (K) bounds active neurons per step (per partition on
+    the distributed path), ``syn_budget`` (S_cap) bounds delivered synapses
+    per step, ``block_capacity`` (B_cap) bounds active 128-blocks in the
+    hierarchical compaction (0 = derive from K).  Budgets directly price
+    the per-step O(B_cap·128 + S_cap) slot work; overruns are *counted*
+    (``dropped``), never silent.
+    """
+
+    spike_capacity: int = 512
+    syn_budget: int = 65_536
+    block_capacity: int = 0
+
+    def as_config_kwargs(self) -> dict:
+        """Kwargs splat for ``SimConfig`` / ``DistConfig``:
+        ``SimConfig(engine="event", **cap.as_config_kwargs())``."""
+        return {"capacity": self}
+
+    def _asdict(self) -> dict:    # NamedTuple-era compatibility
+        return dataclasses.asdict(self)
+
+
+#: Historical per-config defaults, preserved through the deprecation shims.
+MONOLITHIC_CAPACITY = CapacityConfig()
+DISTRIBUTED_CAPACITY = CapacityConfig(spike_capacity=256, syn_budget=32_768)
+
+
+def merge_legacy_capacity(capacity: CapacityConfig | None,
+                          spike_capacity: int | None,
+                          syn_budget: int | None,
+                          block_capacity: int | None,
+                          default: CapacityConfig,
+                          owner: str) -> CapacityConfig:
+    """Resolve a config's capacity from the new field + the deprecated
+    per-field shims.
+
+    The deprecated fields warn only when they *change* the resolved value.
+    The configs null the legacy fields out after merging (they are
+    consumed into ``capacity``, the one read path), so
+    ``dataclasses.replace(cfg, capacity=...)`` round-trips cleanly and a
+    stale shim can never clobber an explicitly replaced capacity.
+    """
+    cap = capacity if capacity is not None else default
+    legacy = {"spike_capacity": spike_capacity, "syn_budget": syn_budget,
+              "block_capacity": block_capacity}
+    changed = {k: v for k, v in legacy.items()
+               if v is not None and v != getattr(cap, k)}
+    if changed:
+        # stacklevel: warn -> merge -> __post_init__ -> generated __init__
+        # -> the caller's construction site
+        warnings.warn(
+            f"{owner}({', '.join(sorted(changed))}=...) is deprecated; pass "
+            f"{owner}(capacity=CapacityConfig(...)) instead",
+            DeprecationWarning, stacklevel=4)
+        cap = dataclasses.replace(cap, **changed)
+    return cap
+
+
+__all__ = ["CapacityConfig", "DISTRIBUTED_CAPACITY", "MONOLITHIC_CAPACITY",
+           "merge_legacy_capacity"]

@@ -1,34 +1,29 @@
 """Distributed multi-core SNN simulation via shard_map (paper §3.2.2-3.2.3).
 
 Maps DCSR partitions onto a device mesh axis ("cores"), one partition per
-device, and exchanges spikes between partitions each delay window with one of
-two communication schemes mirroring the paper's:
+device.  The per-partition step is the SAME function the monolithic
+``simulate()`` runs — the unified step core in :mod:`repro.core.step` —
+parameterized by a registered exchange scheme
+(:mod:`repro.core.exchange`): ``bitmap`` (all_gather of the spike bitmap,
+fixed comm volume), ``event`` (all_gather of K-slot compacted active-id
+lists, comm ∝ activity), or ``blocked`` (event exchange across the cut +
+tile-granular Pallas delivery inside each partition).  Every partition is
+computationally self-contained except for ``scheme.exchange`` — exactly
+the paper's framing of the edge cut as a sparse, data-dependent halo.
 
-* ``bitmap`` — all_gather of the per-partition spike bitmap: one aggregated
-  message per core pair, the shared-synaptic-delivery analogue.  Comm volume
-  is fixed (P*U bits/step) regardless of activity; delivery cost ∝ local nnz.
+Because the step body is shared, the distributed path has full
+observability parity with the monolithic one: :class:`repro.exp.ProbeSpec`
+records (raster / voltage / pop-rate / drops) are collected in-scan per
+partition and mapped back to original neuron ids through ``inv_perm``
+(pad neurons never appear in any record or count), and
+:func:`repro.exp.run_dist_trials` vmaps the whole partitioned scan over a
+seed batch.
 
-* ``event``  — all_gather of fixed-capacity compacted active-neuron index
-  lists: the spike-message analogue (shared axon routing sends one message
-  per target core per spike; on a TPU mesh the all_gather of K event slots is
-  the collective-native equivalent).  Comm volume ∝ activity (K ids/step);
-  delivery cost ∝ events × their local fan-out (bounded by a synapse budget).
-  The per-partition compaction and the bounded ragged gather are the same
-  :mod:`repro.core.compaction` primitives the monolithic event engine runs
-  (hierarchical O(U/128 + B_cap·128) compaction, shared ``ragged_slots``),
-  and drops — budget overruns *and* spikes beyond the event capacity — are
-  counted exactly in synapse units via the prebuilt global fan-out table.
+Stimulation flows through the same :mod:`repro.exp` stimulus pytrees as
+the monolithic loop via :func:`repro.exp.shard_stimulus` (stateless
+stimuli only).
 
-Every partition is computationally self-contained except for the spike
-exchange — exactly the paper's framing of the edge cut as a sparse,
-data-dependent halo.
-
-Stimulation flows through the same :mod:`repro.exp` stimulus pytrees as the
-monolithic loop: :func:`repro.exp.shard_stimulus` remaps per-neuron leaves
-onto the partitioning, and each partition steps the stimulus on its local
-``[U]`` slab with its own PRNG stream (stateless stimuli only).
-
-The same step function also runs unsharded under vmap (``emulate=True``) so
+The same step also runs unsharded under vmap (``emulate=True``) so
 semantics are testable on one device; the shard_map path is exercised in
 tests via a subprocess with XLA_FLAGS=--xla_force_host_platform_device_count.
 """
@@ -36,7 +31,9 @@ tests via a subprocess with XLA_FLAGS=--xla_force_host_platform_device_count.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
+import functools
+import warnings
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -44,189 +41,265 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from .compaction import (derived_block_capacity, ragged_slots,
-                         two_level_active)
+from .capacity import DISTRIBUTED_CAPACITY, CapacityConfig, merge_legacy_capacity
 from .dcsr import DCSR
 from .engine import SimConfig
+from .exchange import (DistArrays, Topology, available_schemes,
+                       build_dist_arrays, get_scheme)
 from .neuron import LIFState, init_state
+from .step import SimCarry, scan_steps
 
-
-# --------------------------------------------------------------------------
-# Per-partition device arrays
-# --------------------------------------------------------------------------
-
-class DistArrays(NamedTuple):
-    """Stacked per-partition synaptic state.  Leading dim = P (sharded)."""
-    # target-major (bitmap scheme): local in-CSR with global source ids
-    syn_src: jax.Array        # [P, S] int32 global new id; pad = P*U
-    syn_tgt: jax.Array        # [P, S] int32 local target;  pad = U
-    syn_w: jax.Array          # [P, S] float32
-    # source-major (event scheme): per-partition fan-out of *global* sources
-    # into local targets.  out_indptr[p, s] = start of global-source s's local
-    # synapse run on partition p.
-    out_indptr: jax.Array     # [P, P*U + 1] int32
-    out_tgt: jax.Array        # [P, S] int32 local target; pad = U
-    out_w: jax.Array          # [P, S] float32
-    pad_mask: jax.Array       # [P, U] bool — True for real neurons
-    src_gfo: jax.Array        # [P, U] int32 global fan-out of local sources
-                              # (sum of their synapse runs over all
-                              # partitions) — exact drop accounting for
-                              # spikes beyond the event capacity
-
-
-def build_dist_arrays(d: DCSR) -> DistArrays:
-    P_, U, S = d.n_parts, d.part_size, d.s_max
-    n_glob = P_ * U
-
-    # event-scheme regroup: per partition, sort synapses by global source
-    out_indptr = np.zeros((P_, n_glob + 1), dtype=np.int32)
-    out_tgt = np.full((P_, S), U, dtype=np.int32)
-    out_w = np.zeros((P_, S), dtype=np.float32)
-    for p in range(P_):
-        valid = d.syn_src[p] < n_glob
-        src = d.syn_src[p][valid]
-        tgt = d.syn_tgt_local[p][valid]
-        w = d.syn_w[p][valid]
-        order = np.argsort(src, kind="stable")
-        src_s, tgt_s, w_s = src[order], tgt[order], w[order]
-        m = len(src_s)
-        out_tgt[p, :m] = tgt_s
-        out_w[p, :m] = w_s
-        counts = np.bincount(src_s, minlength=n_glob)
-        np.cumsum(counts, out=out_indptr[p, 1:])
-
-    pad = np.zeros((P_, U), dtype=bool)
-    real = d.inv_perm.reshape(P_, U) >= 0
-    pad[:] = real
-
-    # global fan-out per source neuron = its local synapse-run length summed
-    # over every partition's source-major indptr
-    gfo = np.diff(out_indptr, axis=1).sum(axis=0).astype(np.int32)  # [P*U]
-
-    return DistArrays(
-        syn_src=jnp.asarray(d.syn_src),
-        syn_tgt=jnp.asarray(d.syn_tgt_local),
-        syn_w=jnp.asarray(d.syn_w),
-        out_indptr=jnp.asarray(out_indptr),
-        out_tgt=jnp.asarray(out_tgt),
-        out_w=jnp.asarray(out_w),
-        pad_mask=jnp.asarray(pad),
-        src_gfo=jnp.asarray(gfo.reshape(P_, U)),
-    )
-
-
-# --------------------------------------------------------------------------
-# Per-partition delivery
-# --------------------------------------------------------------------------
-
-def _deliver_bitmap(spk_global: jax.Array, arr_src, arr_tgt, arr_w, U: int
-                    ) -> jax.Array:
-    """spk_global: [P*U] bool; local in-CSR gather + segment_sum -> [U]."""
-    spk_pad = jnp.concatenate([spk_global.astype(jnp.float32),
-                               jnp.zeros((1,), jnp.float32)])
-    contrib = arr_w * spk_pad[arr_src]
-    return jax.ops.segment_sum(contrib, arr_tgt, num_segments=U + 1)[:U]
-
-
-def _deliver_events(events: jax.Array, out_indptr, out_tgt, out_w,
-                    U: int, n_glob: int, syn_budget: int
-                    ) -> tuple[jax.Array, jax.Array]:
-    """events: [E] global ids (pad = n_glob).  Bounded ragged gather via the
-    shared :func:`repro.core.compaction.ragged_slots` — the same code path
-    the monolithic event engine runs, applied to the all-gathered event
-    list against this partition's source-major local store."""
-    syn_ix, ok, total = ragged_slots(
-        events, out_indptr, syn_budget,
-        invalid_from=n_glob, gather_size=out_tgt.shape[0])
-    contrib = jnp.where(ok, out_w[syn_ix], 0.0)
-    tgt = jnp.where(ok, out_tgt[syn_ix], U)
-    g = jax.ops.segment_sum(contrib, tgt, num_segments=U + 1)[:U]
-    return g, jnp.maximum(total - syn_budget, 0)
-
-
-# --------------------------------------------------------------------------
-# The per-device step (works under shard_map or vmap)
-# --------------------------------------------------------------------------
-
-class DistCarry(NamedTuple):
-    lif: LIFState          # leaves [U] per device
-    ring: jax.Array        # [D, U] bool
-    ptr: jax.Array         # i32 scalar
-    key: jax.Array
-    counts: jax.Array      # [U] int32
-    dropped: jax.Array     # i32 scalar
-    stim: tuple            # stimulus state (stateless stimuli: no leaves)
+AXIS = "cores"
 
 
 @dataclasses.dataclass(frozen=True)
 class DistConfig:
     sim: SimConfig
-    scheme: str = "event"        # "bitmap" | "event"
-    spike_capacity: int = 256    # K per partition (event scheme)
-    syn_budget: int = 32_768     # per-partition synapse budget per step
-    block_capacity: int = 0      # active 128-blocks per partition (0=derive)
+    scheme: str = "event"        # see repro.core.exchange / docs/distributed.md
+    # Deprecated capacity shims -> capacity (CapacityConfig); explicit
+    # writes warn and merge into .capacity, which is the one read path.
+    spike_capacity: Optional[int] = None
+    syn_budget: Optional[int] = None
+    block_capacity: Optional[int] = None
+    capacity: Optional[CapacityConfig] = None
 
-
-def _dist_step(carry: DistCarry, t, *, arrs: DistArrays, stim,
-               cfg: DistConfig, P_: int, U: int, axis: str | None):
-    """One simulation step on one partition.  `axis` names the mesh axis for
-    collectives; None means the caller runs it under vmap with manual
-    all-gather emulation (spmd_axis_name)."""
-    from repro.exp.stimulus import apply_drive, n_split
-    sc = cfg.sim
-    p = sc.params
-    keys = jax.random.split(carry.key, n_split(stim))
-    delayed = carry.ring[carry.ptr]                      # [U] bool local
-
-    n_glob = P_ * U
-    if cfg.scheme == "bitmap":
-        spk_all = jax.lax.all_gather(delayed, axis).reshape(n_glob)
-        g_units = _deliver_bitmap(spk_all, arrs.syn_src, arrs.syn_tgt,
-                                  arrs.syn_w, U)
-        drop = jnp.int32(0)
-    elif cfg.scheme == "event":
-        bcap = cfg.block_capacity or derived_block_capacity(
-            U, cfg.spike_capacity)
-        idx = two_level_active(delayed, cfg.spike_capacity, bcap)
-        my = jax.lax.axis_index(axis)
-        gid = jnp.where(idx < U, idx + my * U, n_glob).astype(jnp.int32)
-        events = jax.lax.all_gather(gid, axis).reshape(-1)   # [P*K]
-        g_units, drop = _deliver_events(events, arrs.out_indptr, arrs.out_tgt,
-                                        arrs.out_w, U, n_glob, cfg.syn_budget)
-        # Spikes beyond the per-partition event capacity never enter any
-        # partition's event list; count their *global* fan-out as dropped
-        # synapses (exact, same units as the budget drops): requested minus
-        # the fan-out of the spikes actually kept by the compaction.
-        req_fo = jnp.sum(jnp.where(delayed, arrs.src_gfo, 0))
-        kept_fo = jnp.sum(jnp.where(
-            idx < U, arrs.src_gfo[jnp.minimum(idx, U - 1)], 0))
-        drop = drop.astype(jnp.int32) + (req_fo - kept_fo)
-    else:
-        raise ValueError(cfg.scheme)
-
-    sstate, drive = stim.step(carry.stim, keys[1:], t, U, p)
-    lif, spikes = apply_drive(carry.lif, g_units, drive, p, sc.fixed_point)
-    spikes = jnp.logical_and(spikes, arrs.pad_mask)      # pad neurons inert
-
-    ring = carry.ring.at[carry.ptr].set(spikes)
-    ptr = (carry.ptr + 1) % p.delay_steps
-    new = DistCarry(lif=lif, ring=ring, ptr=ptr, key=keys[0],
-                    counts=carry.counts + spikes.astype(jnp.int32),
-                    dropped=carry.dropped + drop, stim=sstate)
-    return new, None
+    def __post_init__(self):
+        cap = merge_legacy_capacity(
+            self.capacity, self.spike_capacity, self.syn_budget,
+            self.block_capacity, DISTRIBUTED_CAPACITY, "DistConfig")
+        object.__setattr__(self, "capacity", cap)
+        # consume the shims: dataclasses.replace must never re-apply them
+        for f in ("spike_capacity", "syn_budget", "block_capacity"):
+            object.__setattr__(self, f, None)
 
 
 class DistResult(NamedTuple):
-    counts: np.ndarray      # [n_orig] spike counts mapped back to orig ids
+    """``SimResult``-shaped distributed result: everything per-neuron is
+    mapped back to *original* neuron ids through ``inv_perm``."""
+    counts: np.ndarray        # [n_orig] spike counts
     dropped: int
+    state: Any                # LIFState, leaves [n_orig]
+    raster: np.ndarray | None  # [T, n_orig] (iff the raster probe is on)
+    records: dict             # ProbeSpec records, leading axis T
+    stats: dict               # scheme counters (e.g. blocked tiles_live)
 
 
 def make_core_mesh(n_cores: int, devices=None) -> Mesh:
     devices = devices if devices is not None else jax.devices()
     if len(devices) < n_cores:
         raise ValueError(f"need {n_cores} devices, have {len(devices)}")
-    return Mesh(np.array(devices[:n_cores]), ("cores",))
+    return Mesh(np.array(devices[:n_cores]), (AXIS,))
 
+
+# --------------------------------------------------------------------------
+# Partitioned run plumbing (shared by the single-seed and trial-batch paths)
+# --------------------------------------------------------------------------
+
+def _resolve_dist_stimulus(d: DCSR, sc: SimConfig, sugar_neurons, stimulus):
+    from repro.exp.stimulus import legacy_stimulus, shard_stimulus
+    if stimulus is None:
+        if sugar_neurons is not None:
+            warnings.warn(
+                "sugar_neurons= is deprecated; pass stimulus= instead "
+                "(e.g. repro.exp.PoissonDrive(mask=...) or "
+                "legacy_stimulus(cfg, n, sugar_idx, masked=True))",
+                DeprecationWarning, stacklevel=4)
+        stimulus = legacy_stimulus(sc, d.n_orig, sugar_idx=sugar_neurons,
+                                   masked=True)
+    elif sugar_neurons is not None:
+        raise ValueError(
+            "pass either sugar_neurons (legacy drive) or stimulus, "
+            "not both — an explicit stimulus ignores sugar_neurons")
+    return shard_stimulus(stimulus, d)
+
+
+def _resolve_dist_probes(d: DCSR, sc: SimConfig, probes):
+    """Resolve the probe spec and precompute the per-partition voltage-row
+    remap: ``rows[p, i]`` is probe id i's local row on partition p (0 when
+    not owned — the host keeps only the owning partition's trace)."""
+    if probes is None:
+        from repro.exp.probes import ProbeSpec
+        probes = ProbeSpec(raster=sc.collect_raster)
+    P_, U = d.n_parts, d.part_size
+    ids = np.asarray(probes.voltage, dtype=np.int64)
+    bad = ids[(ids < 0) | (ids >= d.n_orig)]
+    if bad.size:
+        raise ValueError(f"voltage probe ids {bad.tolist()} out of range "
+                         f"for n={d.n_orig}")
+    gid = d.perm[ids] if ids.size else ids
+    owner, local = gid // U, gid % U
+    rows = np.where(owner[None, :] == np.arange(P_)[:, None], local[None, :],
+                    0).astype(np.int32)                     # [P, n_probe]
+    return probes, jnp.asarray(rows), owner.astype(np.int64)
+
+
+def _init_dist_carry(d: DCSR, cfg: DistConfig, stim, scheme,
+                     keys: np.ndarray) -> SimCarry:
+    """Stacked per-partition carry; ``keys`` is [P, 2] (single run) or
+    [P, B, 2] (trial batch — every extra leading key axis becomes a batch
+    axis on all per-partition leaves)."""
+    P_, U = d.n_parts, d.part_size
+    sc = cfg.sim
+    batch = keys.shape[1:-1]            # () or (B,)
+    shp = (P_,) + batch
+
+    def bcast(x, tail):
+        return jnp.broadcast_to(x, shp + tail).copy()
+
+    lif0 = init_state(P_ * U, sc.params, sc.fixed_point)
+    lif0 = jax.tree.map(
+        lambda x: bcast(x.reshape((P_,) + (1,) * len(batch) + (U,))
+                        if batch else x.reshape(P_, U), (U,)), lif0)
+    stats0 = {k: bcast(v, ()) for k, v in scheme.init_stats().items()}
+    return SimCarry(
+        lif=lif0,
+        ring=jnp.zeros(shp + (sc.params.delay_steps, U), dtype=bool),
+        ptr=jnp.zeros(shp, jnp.int32),
+        key=jnp.asarray(keys),
+        counts=jnp.zeros(shp + (U,), jnp.int32),
+        dropped=jnp.zeros(shp, jnp.int32),
+        stim=stim.init_state(U),
+        stats=stats0,
+    )
+
+
+def _partition_run(scheme, cfg: DistConfig, probes, t_steps: int,
+                   topo: Topology, trials: bool):
+    """The per-partition run: the unified scan, optionally vmapped over a
+    leading trial axis of the carry (state/stimulus broadcast)."""
+    def run_one(carry, state, stim, pad, vrows):
+        def go(cy):
+            return scan_steps(scheme, state, cy, stim, cfg.sim, cfg.capacity,
+                              topo, probes, t_steps, pad_mask=pad,
+                              voltage_rows=vrows)
+        return jax.vmap(go)(carry) if trials else go(carry)
+    return run_one
+
+
+@functools.partial(jax.jit, static_argnums=(0, 6, 7, 8, 9),
+                   donate_argnums=(1,))
+def _run_emulated(scheme_name: str, carry, state, stim, pad, vrows,
+                  cfg: DistConfig, probes, t_steps: int, trials: bool):
+    """vmap over the partition dim with a named axis -> collectives work
+    on one device (semantics-identical to the shard_map execution)."""
+    P_, U = pad.shape
+    run_one = _partition_run(get_scheme(scheme_name), cfg, probes, t_steps,
+                             Topology(P_, U, axis=AXIS), trials)
+    return jax.vmap(run_one, in_axes=(0, 0, 0, 0, 0), axis_name=AXIS)(
+        carry, state, stim, pad, vrows)
+
+
+@functools.lru_cache(maxsize=64)
+def _shard_map_fn(scheme_name: str, cfg: DistConfig, probes, t_steps: int,
+                  trials: bool, mesh: Mesh, P_: int, U: int):
+    """One jitted shard_map program per static signature — repeat
+    ``simulate_distributed(emulate=False)`` calls are cache hits, matching
+    the module-level jit of the emulated path."""
+    run_one = _partition_run(get_scheme(scheme_name), cfg, probes, t_steps,
+                             Topology(P_, U, axis=AXIS), trials)
+
+    def sharded(carry, state, stim, pad, vrows):
+        strip = lambda t: jax.tree.map(lambda x: x[0], t)   # local P dim
+        out = run_one(strip(carry), strip(state), strip(stim), pad[0],
+                      vrows[0])
+        return jax.tree.map(lambda x: x[None], out)
+
+    return jax.jit(shard_map(sharded, mesh=mesh, in_specs=P(AXIS),
+                             out_specs=P(AXIS), check_rep=False))
+
+
+def _run_shard_map(scheme_name: str, carry, state, stim, pad, vrows,
+                   cfg: DistConfig, probes, t_steps: int, trials: bool,
+                   mesh: Mesh):
+    P_, U = pad.shape
+    fn = _shard_map_fn(scheme_name, cfg, probes, t_steps, trials, mesh,
+                       P_, U)
+    return fn(carry, state, stim, pad, vrows)
+
+
+def _run_partitioned(d: DCSR, cfg: DistConfig, t_steps: int, keys,
+                     sugar_neurons, stimulus, probes, mesh, emulate: bool,
+                     trials: bool):
+    if cfg.scheme == "local" or cfg.scheme not in available_schemes():
+        raise ValueError(
+            f"unknown distributed exchange scheme {cfg.scheme!r}; "
+            f"available: {sorted(set(available_schemes()) - {'local'})}")
+    scheme = get_scheme(cfg.scheme)
+    state = scheme.build(d, cfg.sim, cfg.capacity)
+    stim = _resolve_dist_stimulus(d, cfg.sim, sugar_neurons, stimulus)
+    probes, vrows, owner = _resolve_dist_probes(d, cfg.sim, probes)
+    pad = jnp.asarray(d.inv_perm.reshape(d.n_parts, d.part_size) >= 0)
+    carry0 = _init_dist_carry(d, cfg, stim, scheme, keys)
+
+    if emulate:
+        out, records = _run_emulated(cfg.scheme, carry0, state, stim, pad,
+                                     vrows, cfg, probes, t_steps, trials)
+    else:
+        if mesh is None:
+            mesh = make_core_mesh(d.n_parts)
+        out, records = _run_shard_map(cfg.scheme, carry0, state, stim, pad,
+                                      vrows, cfg, probes, t_steps, trials,
+                                      mesh)
+    return out, records, probes, owner
+
+
+# --------------------------------------------------------------------------
+# Mapping partition-stacked results back to original neuron ids
+# --------------------------------------------------------------------------
+
+def _to_orig(d: DCSR, arr, dtype=None):
+    """[P, *mid, U] partition-stacked -> [*mid, n_orig] in original ids;
+    pad slots are dropped (they can never contribute — by construction)."""
+    arr = np.asarray(arr)
+    mid = arr.shape[1:-1]
+    flat = np.moveaxis(arr, 0, -2).reshape(
+        mid + (d.n_parts * d.part_size,))
+    out = np.zeros(mid + (d.n_orig,), dtype=dtype or arr.dtype)
+    valid = d.inv_perm >= 0
+    out[..., d.inv_perm[valid]] = flat[..., valid]
+    return out
+
+
+def _assemble_records(d: DCSR, records: dict, probes, owner, n_real: int
+                      ) -> dict:
+    """Per-partition probe records [P, *mid, ...] -> monolithic-shaped
+    records in original neuron ids."""
+    out = {}
+    for name, arr in records.items():
+        arr = np.asarray(arr)
+        if name == "raster":
+            out[name] = _to_orig(d, arr)
+        elif name == "v":
+            # each partition traced every probe id against its own rows
+            # (the record only exists when ids were probed); keep the
+            # owning partition's trace per id
+            out[name] = np.stack(
+                [arr[owner[i], ..., i] for i in range(arr.shape[-1])],
+                axis=-1)
+        elif name == "pop_rate_hz":
+            # per-partition mean over U (incl. inert pads) -> global mean
+            # over the n_orig real neurons
+            out[name] = arr.astype(np.float64).sum(axis=0) * (
+                d.part_size / n_real)
+        elif name == "dropped":
+            out[name] = arr.sum(axis=0)
+        else:                                   # scheme-agnostic fallback
+            out[name] = arr.sum(axis=0)
+    return out
+
+
+def _assemble(d: DCSR, out: SimCarry, records: dict, probes, owner):
+    counts = _to_orig(d, out.counts, dtype=np.int64)
+    state = jax.tree.map(lambda x: _to_orig(d, x), out.lif)
+    recs = _assemble_records(d, records, probes, owner, d.n_orig)
+    stats = {k: np.asarray(v).sum(axis=0) for k, v in out.stats.items()}
+    dropped = np.asarray(out.dropped).sum(axis=0)
+    return counts, dropped, state, recs, stats
+
+
+# --------------------------------------------------------------------------
+# Entry points
+# --------------------------------------------------------------------------
 
 def simulate_distributed(
     d: DCSR,
@@ -237,79 +310,29 @@ def simulate_distributed(
     mesh: Mesh | None = None,
     emulate: bool = False,
     stimulus=None,
+    probes=None,
 ) -> DistResult:
-    """Run the partitioned network.  ``emulate=True`` uses vmap with
-    spmd_axis_name on one device (semantics-identical); otherwise shard_map
+    """Run the partitioned network.  ``emulate=True`` uses vmap with an
+    axis name on one device (semantics-identical); otherwise shard_map
     over a "cores" mesh axis with one partition per device.
 
-    ``stimulus`` is any stateless :class:`repro.exp.Stimulus` addressed in
-    *original* neuron ids; it is sharded onto the partitioning here.  The
-    default reconstructs the legacy masked sugar-Poisson + background drive
-    from ``cfg.sim`` and ``sugar_neurons``.
+    ``cfg.scheme`` selects a registered exchange scheme (see
+    :func:`repro.core.exchange.available_schemes`).  ``stimulus`` is any
+    stateless :class:`repro.exp.Stimulus` addressed in *original* neuron
+    ids (sharded onto the partitioning here); ``probes`` any
+    :class:`repro.exp.ProbeSpec`, with records returned in original ids
+    exactly like :func:`repro.core.simulate`.  For a vmapped seed batch
+    use :func:`repro.exp.run_dist_trials`.
     """
-    from repro.exp.stimulus import legacy_stimulus, shard_stimulus
+    keys = jax.random.split(jax.random.PRNGKey(seed), d.n_parts)
+    out, records, probes, owner = _run_partitioned(
+        d, cfg, t_steps, keys, sugar_neurons, stimulus, probes, mesh,
+        emulate, trials=False)
+    counts, dropped, state, recs, stats = _assemble(d, out, records, probes,
+                                                    owner)
+    return DistResult(counts=counts, dropped=int(dropped), state=state,
+                      raster=recs.get("raster"), records=recs, stats=stats)
 
-    P_, U = d.n_parts, d.part_size
-    arrs = build_dist_arrays(d)
-    sc = cfg.sim
-    if stimulus is None:
-        stimulus = legacy_stimulus(sc, d.n_orig, sugar_idx=sugar_neurons,
-                                   masked=True)
-    elif sugar_neurons is not None:
-        raise ValueError(
-            "pass either sugar_neurons (legacy drive) or stimulus, "
-            "not both — an explicit stimulus ignores sugar_neurons")
-    stim = shard_stimulus(stimulus, d)
 
-    lif0 = init_state(P_ * U, sc.params, sc.fixed_point)
-    lif0 = jax.tree.map(lambda x: x.reshape(P_, U), lif0)
-    keys = jax.random.split(jax.random.PRNGKey(seed), P_)
-    carry0 = DistCarry(
-        lif=lif0,
-        ring=jnp.zeros((P_, sc.params.delay_steps, U), dtype=bool),
-        ptr=jnp.zeros((P_,), jnp.int32),
-        key=keys,
-        counts=jnp.zeros((P_, U), jnp.int32),
-        dropped=jnp.zeros((P_,), jnp.int32),
-        stim=stim.init_state(U),
-    )
-
-    axis = "cores"
-
-    def run_one(carry, arr, st):
-        # scan over time on one device's partition
-        def body(c, t):
-            return _dist_step(c, t, arrs=arr, stim=st, cfg=cfg, P_=P_, U=U,
-                              axis=axis)
-        c, _ = jax.lax.scan(body, carry,
-                            jnp.arange(t_steps, dtype=jnp.int32))
-        return c
-
-    if emulate:
-        # vmap over the partition dim with a named axis -> collectives work
-        out = jax.jit(jax.vmap(run_one, in_axes=(0, 0, 0), axis_name=axis)
-                      )(carry0, arrs, stim)
-    else:
-        if mesh is None:
-            mesh = make_core_mesh(P_)
-        spec_carry = jax.tree.map(lambda _: P("cores"), carry0)
-        spec_arr = jax.tree.map(lambda _: P("cores"), arrs)
-        spec_stim = jax.tree.map(lambda _: P("cores"), stim)
-
-        def sharded(carry, arr, st):
-            carry = jax.tree.map(lambda x: x[0], carry)   # strip local P dim
-            arr = jax.tree.map(lambda x: x[0], arr)
-            st = jax.tree.map(lambda x: x[0], st)
-            c = run_one(carry, arr, st)
-            return jax.tree.map(lambda x: x[None], c)
-
-        fn = shard_map(sharded, mesh=mesh,
-                       in_specs=(spec_carry, spec_arr, spec_stim),
-                       out_specs=spec_carry, check_rep=False)
-        out = jax.jit(fn)(carry0, arrs, stim)
-
-    counts_pu = np.asarray(out.counts).reshape(P_ * U)
-    counts = np.zeros(d.n_orig, dtype=np.int64)
-    valid = d.inv_perm >= 0
-    counts[d.inv_perm[valid]] = counts_pu[valid]
-    return DistResult(counts=counts, dropped=int(np.asarray(out.dropped).sum()))
+__all__ = ["AXIS", "DistArrays", "DistConfig", "DistResult",
+           "build_dist_arrays", "make_core_mesh", "simulate_distributed"]

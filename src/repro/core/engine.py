@@ -21,15 +21,18 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .capacity import MONOLITHIC_CAPACITY, CapacityConfig, merge_legacy_capacity
 from .connectome import Connectome
 from .engines import available_engines, get_engine
 from .neuron import LIFParams, LIFState, init_state
+from .step import SimCarry, scan_steps
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,11 +47,28 @@ class SimConfig:
     poisson_rate_hz: float = 150.0
     poisson_weight: float = 180.0   # weight units delivered per Poisson event
     background_rate_hz: float = 0.0  # scaling-study probabilistic spiking
-    spike_capacity: int = 512        # K: max active neurons per step (event)
-    syn_budget: int = 65_536         # S_cap: max delivered synapses per step
-    block_capacity: int = 0          # B_cap: max active 128-blocks (0=derive)
+    # Deprecated capacity shims -> capacity (CapacityConfig); explicit
+    # writes warn and merge into .capacity, which is the one read path.
+    spike_capacity: Optional[int] = None
+    syn_budget: Optional[int] = None
+    block_capacity: Optional[int] = None
     ell_width_cap: int = 4096        # SSD fan-in cap
-    collect_raster: bool = False     # legacy alias for ProbeSpec(raster=True)
+    collect_raster: bool = False     # deprecated: use ProbeSpec(raster=True)
+    capacity: Optional[CapacityConfig] = None   # event-path static budgets
+
+    def __post_init__(self):
+        cap = merge_legacy_capacity(
+            self.capacity, self.spike_capacity, self.syn_budget,
+            self.block_capacity, MONOLITHIC_CAPACITY, "SimConfig")
+        object.__setattr__(self, "capacity", cap)
+        # consume the shims: dataclasses.replace must never re-apply them
+        for f in ("spike_capacity", "syn_budget", "block_capacity"):
+            object.__setattr__(self, f, None)
+        if self.collect_raster:
+            warnings.warn(
+                "SimConfig(collect_raster=True) is deprecated; pass "
+                "probes=ProbeSpec(raster=True) instead",
+                DeprecationWarning, stacklevel=3)
 
 
 def build_synapses(c: Connectome, cfg: SimConfig) -> Any:
@@ -64,16 +84,6 @@ def build_synapses(c: Connectome, cfg: SimConfig) -> Any:
 # Full simulation loop
 # --------------------------------------------------------------------------
 
-class SimCarry(NamedTuple):
-    lif: LIFState
-    ring: jax.Array        # [D, n] bool delayed-spike ring buffer
-    ptr: jax.Array         # scalar int32
-    key: jax.Array
-    counts: jax.Array      # [n] int32 spike counts
-    dropped: jax.Array     # scalar int32 total dropped synapse events
-    stim: Any              # stimulus state pytree (() for stateless stimuli)
-
-
 class SimResult(NamedTuple):
     counts: jax.Array
     state: LIFState
@@ -84,37 +94,19 @@ class SimResult(NamedTuple):
 
 def _scan_steps(syn, carry: SimCarry, stim, cfg: SimConfig, probes,
                 t_steps: int, n: int):
-    """Scan `t_steps` LIF+delivery steps; shared by the single-run and
-    vmapped-trials entry points.
+    """Scan `t_steps` steps of the ONE step body (:mod:`repro.core.step`)
+    through the degenerate P=1 ``local`` exchange scheme; shared by the
+    single-run and vmapped-trials entry points.
 
     ``syn`` is the engine state pytree and ``stim`` the stimulus pytree
     (their static fields key the jit cache); all stimulus-specific work —
     Poisson drive, background spiking, clocked currents — flows through
     ``stim.step``, all observability through ``probes.collect``.
     """
-    from repro.exp.stimulus import apply_drive, n_split
-    p = cfg.params
-    deliver = get_engine(cfg.engine).deliver
-    nk = n_split(stim)   # legacy-compatible key layout; see exp.stimulus
-
-    def step(carry: SimCarry, t):
-        keys = jax.random.split(carry.key, nk)
-        delayed = carry.ring[carry.ptr]
-        g_units, drop = deliver(syn, delayed, cfg)
-
-        sstate, drive = stim.step(carry.stim, keys[1:], t, n, p)
-        lif, spikes = apply_drive(carry.lif, g_units, drive, p,
-                                  cfg.fixed_point)
-
-        ring = carry.ring.at[carry.ptr].set(spikes)
-        ptr = (carry.ptr + 1) % p.delay_steps
-        counts = carry.counts + spikes.astype(jnp.int32)
-        new = SimCarry(lif=lif, ring=ring, ptr=ptr, key=keys[0], counts=counts,
-                       dropped=carry.dropped + drop.astype(jnp.int32),
-                       stim=sstate)
-        return new, probes.collect(spikes=spikes, lif=lif, drop=drop, params=p)
-
-    return jax.lax.scan(step, carry, jnp.arange(t_steps, dtype=jnp.int32))
+    from .exchange import Topology, get_scheme
+    return scan_steps(get_scheme("local"), syn, carry, stim, cfg,
+                      cfg.capacity, Topology(1, n, axis=None), probes,
+                      t_steps)
 
 
 @functools.partial(jax.jit, static_argnums=(3, 4, 5, 6), donate_argnums=(1,))
@@ -142,6 +134,7 @@ def _init_carry(n: int, cfg: SimConfig, stimulus, seed: int) -> SimCarry:
         counts=jnp.zeros(n, jnp.int32),
         dropped=jnp.int32(0),
         stim=stimulus.init_state(n),
+        stats={},
     )
 
 
@@ -155,6 +148,10 @@ def _resolve_stimulus(cfg: SimConfig, n: int, sugar_neurons, stimulus):
     from repro.exp.stimulus import legacy_stimulus
     sugar_idx = None
     if sugar_neurons is not None:
+        warnings.warn(
+            "sugar_neurons= is deprecated; pass stimulus= instead (e.g. "
+            "repro.exp.PoissonDrive(idx=...) or legacy_stimulus(cfg, n, "
+            "sugar_idx))", DeprecationWarning, stacklevel=3)
         sugar_idx = np.asarray(sugar_neurons).astype(np.int32)
     return legacy_stimulus(cfg, n, sugar_idx)
 

@@ -21,12 +21,12 @@ requested total computed from the full spike vector).
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..capacity import CapacityConfig
 from ..compaction import (BLOCK, active_fanout_total, derived_block_capacity,
                           n_blocks, ragged_slots, slot_owner,
                           two_level_active)
@@ -47,23 +47,16 @@ class EventState:
     n: int = static_field(default=0)
 
 
-class Capacity(NamedTuple):
-    """Joint static-shape provisioning for the event path (see
-    :func:`auto_capacity`).  Field names match the ``SimConfig`` /
-    ``DistConfig`` knobs, so ``SimConfig(engine="event",
-    **cap.as_config_kwargs())`` wires all three."""
-
-    spike_capacity: int     # K: active-neuron slots per step
-    syn_budget: int         # S_cap: delivered-synapse slots per step
-    block_capacity: int     # B_cap: active 128-blocks per step
-
-    def as_config_kwargs(self) -> dict:
-        return self._asdict()
+#: Joint static-shape provisioning now lives in
+#: :class:`repro.core.capacity.CapacityConfig`; ``Capacity`` remains as the
+#: historical alias (``auto_capacity`` returns it, ``as_config_kwargs``
+#: routes through the ``capacity=`` config field).
+Capacity = CapacityConfig
 
 
 def auto_capacity(c: Connectome, rate_hz: float, dt_ms: float = 0.1,
                   margin: float = 4.0, fanout: str = "p99.9",
-                  block: int = BLOCK) -> Capacity:
+                  block: int = BLOCK) -> CapacityConfig:
     """Provision the event path's static budgets for an expected activity
     level — the static-shape analogue of Loihi's 'work ~ actual spike
     count'.  The engine still *counts* drops, so under-provisioning is
@@ -111,8 +104,8 @@ def auto_capacity(c: Connectome, rate_hz: float, dt_ms: float = 0.1,
                          + margin * np.sqrt(kp) * fo.std() + hub))
     budget = min(budget, max(4096, int(c.nnz)))
     bcap = max(1, min(n_blocks(c.n, block), max(32, int(np.ceil(kp)))))
-    return Capacity(spike_capacity=cap, syn_budget=budget,
-                    block_capacity=bcap)
+    return CapacityConfig(spike_capacity=cap, syn_budget=budget,
+                          block_capacity=bcap)
 
 
 @register
@@ -130,15 +123,16 @@ class EventEngine:
 
     def deliver(self, state: EventState, spikes: jax.Array, cfg):
         n = state.n
-        bcap = cfg.block_capacity or derived_block_capacity(
-            n, cfg.spike_capacity)
-        act_idx = two_level_active(spikes, cfg.spike_capacity, bcap)
+        cap = cfg.capacity
+        bcap = cap.block_capacity or derived_block_capacity(
+            n, cap.spike_capacity)
+        act_idx = two_level_active(spikes, cap.spike_capacity, bcap)
         syn_ix, ok, total = ragged_slots(
-            act_idx, state.out_indptr, cfg.syn_budget,
+            act_idx, state.out_indptr, cap.syn_budget,
             invalid_from=n, gather_size=state.out_tgt.shape[0])
         contrib = jnp.where(ok, state.out_w[syn_ix], 0.0)
         tgt = jnp.where(ok, state.out_tgt[syn_ix], n)
         g = jax.ops.segment_sum(contrib, tgt, num_segments=n + 1)[:n]
         requested = active_fanout_total(spikes, state.out_indptr)
-        delivered = jnp.minimum(total, cfg.syn_budget)
+        delivered = jnp.minimum(total, cap.syn_budget)
         return g, requested - delivered

@@ -1,0 +1,37 @@
+"""Exchange-scheme registry: one module per partition-communication strategy.
+
+Importing this package registers every built-in scheme:
+
+======== ==================================================================
+local    degenerate P=1 scheme (no collectives) — delegates to the
+         delivery-engine registry; the monolithic ``simulate()`` path
+bitmap   all_gather of the per-partition spike bitmap (fixed comm volume,
+         delivery ∝ local nnz) — the shared-synaptic-delivery analogue
+event    all_gather of K-slot compacted active-id lists (comm ∝ activity,
+         delivery bounded by the synapse budget) — the spike-message
+         analogue, on the shared :mod:`repro.core.compaction` primitives
+blocked  sharded Pallas tile store: event exchange across the cut,
+         tile-granular skip inside each partition (per-partition blk_id
+         remap into the global spike-block space)
+======== ==================================================================
+
+See ``docs/distributed.md`` for the comparison and
+:mod:`repro.core.exchange.base` for the :class:`ExchangeScheme` protocol.
+"""
+
+from .base import (ExchangeScheme, Topology, available_schemes, get_scheme,
+                   memoized_build, register_scheme)
+from .arrays import DistArrays, build_dist_arrays
+from . import bitmap, blocked, event, local   # noqa: F401 (register)
+from .bitmap import BitmapExchange
+from .blocked import BlockedExchange, ShardedBlockedState
+from .event import EventExchange, gather_active_events
+from .local import LocalExchange
+
+__all__ = [
+    "ExchangeScheme", "Topology", "available_schemes", "get_scheme",
+    "memoized_build", "register_scheme",
+    "DistArrays", "build_dist_arrays",
+    "BitmapExchange", "BlockedExchange", "EventExchange", "LocalExchange",
+    "ShardedBlockedState", "gather_active_events",
+]

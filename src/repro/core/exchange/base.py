@@ -1,0 +1,134 @@
+"""Exchange-scheme protocol, registry, and build memoization.
+
+An *exchange scheme* is one strategy for moving spikes between
+self-contained partitions and turning them into each partition's local
+synaptic drive — the paper's §3.2.2-3.2.3 communication layer, made
+pluggable exactly like synaptic delivery (:mod:`repro.core.engines`) and
+stimulation (:mod:`repro.exp`).  Each scheme lives in its own module under
+:mod:`repro.core.exchange` and registers a singleton at import time:
+
+    @register_scheme
+    class EventExchange:
+        name = "event"
+        def build(self, source, sim, cap) -> state: ...       # host, once
+        def exchange(self, state, delayed, cap, topo): ...    # collectives
+        def deliver(self, state, payload, delayed, sim, cap, topo): ...
+        def init_stats(self) -> dict: ...                     # optional
+
+``build`` turns the partitioned network (a :class:`repro.core.dcsr.DCSR`,
+or a plain :class:`Connectome` for the degenerate ``local`` scheme) into
+partition-stacked device state.  Per step the unified core
+(:mod:`repro.core.step`) calls ``exchange`` — the *only* place collectives
+(`all_gather` over ``topo.axis``) may appear — and then ``deliver``, which
+maps the exchanged payload onto the local ``[U]`` drive plus an exact
+dropped-synapse count and an optional dict of scalar stats counters
+(accumulated into the carry; see ``init_stats``).
+
+The monolithic simulation loop is the P=1 degenerate case: the ``local``
+scheme's exchange is the identity (no collectives) and its deliver
+delegates to the delivery-engine registry — which is what lets
+``simulate()`` and ``simulate_distributed()`` share one step body.
+"""
+
+from __future__ import annotations
+
+import weakref
+from typing import Any, NamedTuple, Protocol, runtime_checkable
+
+
+class Topology(NamedTuple):
+    """Static partition geometry threaded through every scheme call.
+
+    ``axis`` names the mesh/vmap axis collectives run over (``None`` for
+    the single-partition ``local`` scheme, which must not communicate).
+    """
+
+    n_parts: int          # P
+    part_size: int        # U: local neuron slots (n itself when P == 1)
+    axis: str | None      # collective axis name
+
+    @property
+    def n_global(self) -> int:
+        return self.n_parts * self.part_size
+
+
+@runtime_checkable
+class ExchangeScheme(Protocol):
+    """One partition-exchange strategy (see module docstring)."""
+
+    name: str
+
+    def build(self, source: Any, sim, cap) -> Any:
+        """Partitioned network -> partition-stacked device state (host
+        work, runs once; memoize via :func:`memoized_build`)."""
+        ...
+
+    def exchange(self, state: Any, delayed, cap, topo: Topology) -> Any:
+        """Local delayed spikes [U] -> exchanged payload (collectives)."""
+        ...
+
+    def deliver(self, state: Any, payload: Any, delayed, sim, cap,
+                topo: Topology):
+        """Payload -> (g_units [U] f32, dropped i32, stats dict)."""
+        ...
+
+    def init_stats(self) -> dict:
+        """Zero-initialized per-run stats counters ({} for most schemes)."""
+        return {}
+
+
+_REGISTRY: dict[str, ExchangeScheme] = {}
+
+
+def register_scheme(cls):
+    """Class decorator: instantiate and register an exchange scheme."""
+    inst = cls()
+    if not getattr(inst, "name", None):
+        raise ValueError(f"{cls.__name__} must define a non-empty .name")
+    _REGISTRY[inst.name] = inst
+    return cls
+
+
+def get_scheme(name: str) -> ExchangeScheme:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown exchange scheme {name!r}; "
+            f"available: {sorted(_REGISTRY)}") from None
+
+
+def available_schemes() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+# --------------------------------------------------------------------------
+# Build memoization
+# --------------------------------------------------------------------------
+
+_BUILD_CACHE: dict[tuple[int, str], tuple] = {}
+
+
+def memoized_build(source: Any, key: str, build_fn):
+    """Memoize a host-side build on the identity of ``source``.
+
+    ``build_dcsr`` outputs are immutable snapshots, so per-(source, key)
+    results are cached for the source's lifetime — the distributed
+    analogue of amortizing ``build_synapses`` via ``syn=``.  Entries are
+    evicted when the source is garbage-collected (sources are unhashable
+    numpy-holding dataclasses, hence the id + weakref bookkeeping)."""
+    k = (id(source), key)
+    hit = _BUILD_CACHE.get(k)
+    if hit is not None and hit[0]() is source:
+        return hit[1]
+    out = build_fn()
+    try:
+        ref = weakref.ref(source, lambda _r, k=k: _BUILD_CACHE.pop(k, None))
+    except TypeError:
+        return out
+    _BUILD_CACHE[k] = (ref, out)
+    return out
+
+
+__all__ = ["ExchangeScheme", "Topology", "available_schemes", "get_scheme",
+           "memoized_build", "register_scheme"]

@@ -1,0 +1,86 @@
+"""Event scheme: all_gather of fixed-capacity compacted active-neuron lists.
+
+The spike-message analogue (shared axon routing sends one message per
+target core per spike; on a TPU mesh the all_gather of K event slots is
+the collective-native equivalent).  Comm volume ∝ activity (K ids/step);
+delivery cost ∝ events × their local fan-out (bounded by a synapse
+budget).  The per-partition compaction and the bounded ragged gather are
+the same :mod:`repro.core.compaction` primitives the monolithic event
+engine runs, and drops — budget overruns *and* spikes beyond the event
+capacity — are counted exactly in synapse units via the prebuilt global
+fan-out table (``DistArrays.src_gfo``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..compaction import derived_block_capacity, ragged_slots, two_level_active
+from .arrays import build_dist_arrays
+from .base import Topology, register_scheme
+
+
+def gather_active_events(delayed: jax.Array, cap, topo: Topology):
+    """Compact this partition's delayed spikes and all_gather the global
+    event lists.
+
+    Returns ``(events [P*K] global ids, idx [K] local kept ids)`` — shared
+    by the ``event`` and sharded ``blocked`` schemes, whose cross-cut
+    exchange is identical (they differ only in local delivery granularity:
+    synapse runs vs 128×128 tiles)."""
+    U, n_glob = topo.part_size, topo.n_global
+    bcap = cap.block_capacity or derived_block_capacity(U, cap.spike_capacity)
+    idx = two_level_active(delayed, cap.spike_capacity, bcap)
+    my = jax.lax.axis_index(topo.axis)
+    gid = jnp.where(idx < U, idx + my * U, n_glob).astype(jnp.int32)
+    events = jax.lax.all_gather(gid, topo.axis).reshape(-1)   # [P*K]
+    return events, idx
+
+
+def capacity_overflow_fanout(delayed, idx, src_gfo, U: int):
+    """Global fan-out of the spikes the bounded compaction could not keep —
+    they never enter any partition's event list, so their whole fan-out is
+    dropped (exact: requested minus kept, in synapse units)."""
+    req_fo = jnp.sum(jnp.where(delayed, src_gfo, 0))
+    kept_fo = jnp.sum(jnp.where(idx < U, src_gfo[jnp.minimum(idx, U - 1)], 0))
+    return req_fo - kept_fo
+
+
+def deliver_events(events: jax.Array, out_indptr, out_tgt, out_w,
+                   U: int, n_glob: int, syn_budget: int
+                   ) -> tuple[jax.Array, jax.Array]:
+    """events: [E] global ids (pad = n_glob).  Bounded ragged gather via the
+    shared :func:`repro.core.compaction.ragged_slots` — the same code path
+    the monolithic event engine runs, applied to the all-gathered event
+    list against this partition's source-major local store."""
+    syn_ix, ok, total = ragged_slots(
+        events, out_indptr, syn_budget,
+        invalid_from=n_glob, gather_size=out_tgt.shape[0])
+    contrib = jnp.where(ok, out_w[syn_ix], 0.0)
+    tgt = jnp.where(ok, out_tgt[syn_ix], U)
+    g = jax.ops.segment_sum(contrib, tgt, num_segments=U + 1)[:U]
+    return g, jnp.maximum(total - syn_budget, 0)
+
+
+@register_scheme
+class EventExchange:
+    name = "event"
+
+    def build(self, d, sim, cap):
+        return build_dist_arrays(d)
+
+    def init_stats(self) -> dict:
+        return {}
+
+    def exchange(self, state, delayed, cap, topo: Topology):
+        return gather_active_events(delayed, cap, topo)
+
+    def deliver(self, state, payload, delayed, sim, cap, topo: Topology):
+        events, idx = payload
+        U, n_glob = topo.part_size, topo.n_global
+        g, drop = deliver_events(events, state.out_indptr, state.out_tgt,
+                                 state.out_w, U, n_glob, cap.syn_budget)
+        drop = drop.astype(jnp.int32) + capacity_overflow_fanout(
+            delayed, idx, state.src_gfo, U)
+        return g, drop, {}

@@ -1,0 +1,34 @@
+"""Local scheme: the degenerate P=1 exchange (no collectives).
+
+The monolithic simulation loop is the single-partition case of the
+paper's model of computation: every neuron lives on one "core", so the
+spike exchange is the identity and delivery is whatever the registered
+delivery engine (:mod:`repro.core.engines`, ``SimConfig.engine``) does.
+Routing ``simulate()`` through this scheme is what lets the monolithic
+and distributed entry points share one step body verbatim
+(:mod:`repro.core.step`).
+"""
+
+from __future__ import annotations
+
+from .base import Topology, register_scheme
+
+
+@register_scheme
+class LocalExchange:
+    name = "local"
+
+    def build(self, c, sim, cap):
+        from ..engines import get_engine
+        return get_engine(sim.engine).build(c, sim)
+
+    def init_stats(self) -> dict:
+        return {}
+
+    def exchange(self, state, delayed, cap, topo: Topology):
+        return delayed
+
+    def deliver(self, state, payload, delayed, sim, cap, topo: Topology):
+        from ..engines import get_engine
+        g, drop = get_engine(sim.engine).deliver(state, payload, sim)
+        return g, drop, {}

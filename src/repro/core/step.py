@@ -1,0 +1,88 @@
+"""The one partition-aware simulation step (paper §3.2.2-3.2.3).
+
+The paper's central claim is that one model of computation — sparse event
+exchange between self-contained cores — spans a single Loihi core and 12
+chips.  This module is that claim rendered as code: exactly one step body
+— ring-buffer delayed-spike readout, spike exchange/delivery, stimulus
+step, LIF integration, pad masking, counters, probe collection — shared
+verbatim by ``simulate()`` (the degenerate P=1 ``local`` scheme, no
+collectives) and ``simulate_distributed()`` (any multi-partition scheme
+under vmap emulation or shard_map).  What varies is *only* the registered
+:class:`repro.core.exchange.ExchangeScheme` and the
+:class:`~repro.core.exchange.base.Topology` it runs over.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .exchange.base import ExchangeScheme, Topology
+from .neuron import LIFState
+
+
+class SimCarry(NamedTuple):
+    """Per-partition scan carry (leaves are [U]-shaped; U = n when P = 1)."""
+    lif: LIFState
+    ring: jax.Array        # [D, U] bool delayed-spike ring buffer
+    ptr: jax.Array         # scalar int32
+    key: jax.Array
+    counts: jax.Array      # [U] int32 spike counts
+    dropped: jax.Array     # scalar int32 total dropped synapse events
+    stim: Any              # stimulus state pytree (() for stateless stimuli)
+    stats: dict            # scheme stats counters (scheme.init_stats())
+
+
+def sim_step(carry: SimCarry, t, *, scheme: ExchangeScheme, state, stim,
+             sim, cap, topo: Topology, probes, pad_mask=None,
+             voltage_rows=None):
+    """One simulation step on one partition — THE step body.
+
+    ``scheme.exchange`` is the only place collectives may appear;
+    everything else is partition-local.  ``pad_mask`` ([U] bool, True for
+    real neurons) keeps padding slots inert on padded partitions;
+    ``voltage_rows`` optionally remaps the probe's voltage ids onto this
+    partition's local rows (see :meth:`repro.exp.ProbeSpec.collect`).
+    """
+    from repro.exp.stimulus import apply_drive, n_split
+    p = sim.params
+    keys = jax.random.split(carry.key, n_split(stim))
+    delayed = carry.ring[carry.ptr]
+
+    payload = scheme.exchange(state, delayed, cap, topo)
+    g_units, drop, stats = scheme.deliver(state, payload, delayed, sim, cap,
+                                          topo)
+
+    sstate, drive = stim.step(carry.stim, keys[1:], t, topo.part_size, p)
+    lif, spikes = apply_drive(carry.lif, g_units, drive, p, sim.fixed_point)
+    if pad_mask is not None:
+        spikes = jnp.logical_and(spikes, pad_mask)
+
+    ring = carry.ring.at[carry.ptr].set(spikes)
+    ptr = (carry.ptr + 1) % p.delay_steps
+    new = SimCarry(
+        lif=lif, ring=ring, ptr=ptr, key=keys[0],
+        counts=carry.counts + spikes.astype(jnp.int32),
+        dropped=carry.dropped + drop.astype(jnp.int32),
+        stim=sstate,
+        stats={k: carry.stats[k] + stats[k] for k in carry.stats})
+    return new, probes.collect(spikes=spikes, lif=lif, drop=drop, params=p,
+                               voltage_rows=voltage_rows)
+
+
+def scan_steps(scheme: ExchangeScheme, state, carry: SimCarry, stim, sim,
+               cap, topo: Topology, probes, t_steps: int, *, pad_mask=None,
+               voltage_rows=None):
+    """Scan ``t_steps`` of :func:`sim_step` — the shared inner loop of every
+    entry point (single-run, vmapped trials, emulated and shard_map
+    distributed)."""
+    def step(c, t):
+        return sim_step(c, t, scheme=scheme, state=state, stim=stim, sim=sim,
+                        cap=cap, topo=topo, probes=probes, pad_mask=pad_mask,
+                        voltage_rows=voltage_rows)
+    return jax.lax.scan(step, carry, jnp.arange(t_steps, dtype=jnp.int32))
+
+
+__all__ = ["SimCarry", "scan_steps", "sim_step"]

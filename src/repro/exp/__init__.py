@@ -12,7 +12,7 @@ from .scenarios import (Scenario, available_scenarios, build_scenario,
 from .stimulus import (SILENT, Background, Compose, PoissonDrive, PulseTrain,
                        RampDrive, SkipKey, StepCurrent, StimDrive, Stimulus,
                        legacy_stimulus, per_neuron, shard_stimulus)
-from .trials import TrialResult, run_trials
+from .trials import DistTrialResult, TrialResult, run_dist_trials, run_trials
 
 __all__ = [
     "NO_PROBES", "ProbeSpec",
@@ -21,5 +21,5 @@ __all__ = [
     "SILENT", "Background", "Compose", "PoissonDrive", "PulseTrain",
     "RampDrive", "SkipKey", "StepCurrent", "StimDrive", "Stimulus",
     "legacy_stimulus", "per_neuron", "shard_stimulus",
-    "TrialResult", "run_trials",
+    "DistTrialResult", "TrialResult", "run_dist_trials", "run_trials",
 ]

@@ -46,20 +46,28 @@ class ProbeSpec:
         return bool(self.raster or self.voltage or self.pop_rate or self.drops)
 
     def collect(self, *, spikes: jax.Array, lif, drop: jax.Array,
-                params) -> dict:
-        """Build this step's record dict (traced inside the scan body)."""
+                params, voltage_rows=None) -> dict:
+        """Build this step's record dict (traced inside the scan body).
+
+        ``voltage_rows`` optionally remaps the probe ids onto this
+        partition's local rows (distributed path: every partition traces
+        all probe ids against its own ``[U]`` slab, and the host keeps the
+        owning partition's trace — see ``repro.core.distributed``)."""
         rec: dict = {}
         if self.raster:
             rec["raster"] = spikes
         if self.voltage:
-            n = spikes.shape[0]
-            bad = [i for i in self.voltage if not 0 <= i < n]
-            if bad:
-                # jit-time check: JAX's clamping gather would otherwise
-                # silently return a different neuron's trace
-                raise ValueError(f"voltage probe ids {bad} out of range "
-                                 f"for n={n}")
-            rec["v"] = lif.v[jnp.asarray(self.voltage, dtype=jnp.int32)]
+            if voltage_rows is not None:
+                rec["v"] = lif.v[voltage_rows]
+            else:
+                n = spikes.shape[0]
+                bad = [i for i in self.voltage if not 0 <= i < n]
+                if bad:
+                    # jit-time check: JAX's clamping gather would otherwise
+                    # silently return a different neuron's trace
+                    raise ValueError(f"voltage probe ids {bad} out of range "
+                                     f"for n={n}")
+                rec["v"] = lif.v[jnp.asarray(self.voltage, dtype=jnp.int32)]
         if self.pop_rate:
             rec["pop_rate_hz"] = (
                 spikes.astype(jnp.float32).mean() / (params.dt * 1e-3))

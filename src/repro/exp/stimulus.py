@@ -367,7 +367,7 @@ def legacy_stimulus(cfg, n: int, sugar_idx=None, masked: bool = False) -> Compos
 
     ``masked=False`` mirrors the monolithic ``_run_scan`` (scatter-mode
     sugar Poisson iff ``sugar_idx`` given); ``masked=True`` mirrors the
-    distributed ``_dist_step`` (masked Poisson iff ``poisson_rate_hz > 0``,
+    historical distributed step (masked Poisson iff ``poisson_rate_hz > 0``,
     mask possibly empty).  Both reproduce the historical key layout
     bit-for-bit (see :class:`SkipKey`).
     """

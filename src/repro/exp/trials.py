@@ -4,7 +4,10 @@ The paper validates implementations by comparing per-neuron spike rates
 averaged over 10 trials (Figs 6, 12, 14-15).  :func:`run_trials` vmaps the
 simulation scan over a batch of seeds — one trace, one device dispatch —
 and is bit-identical to a Python loop of :func:`repro.core.simulate` calls
-over the same seeds.  ``mean_rates_hz`` feeds
+over the same seeds.  :func:`run_dist_trials` is the same batching on the
+partitioned path (the unified step core makes it the same scan): the
+trial axis is vmapped *inside* each partition, so one emulated or
+shard_map dispatch covers the whole seed batch.  ``mean_rates_hz`` feeds
 :func:`repro.core.validate.parity` directly.
 """
 
@@ -21,6 +24,16 @@ from repro.core.engine import (SimConfig, _init_carry, _resolve_probes,
                                _resolve_stimulus, _run_scan_trials,
                                build_synapses)
 from repro.core.neuron import LIFState
+
+
+def _seed_tuple(seeds) -> tuple:
+    if isinstance(seeds, (int, np.integer)):
+        seeds = tuple(range(int(seeds)))
+    else:
+        seeds = tuple(int(s) for s in seeds)
+    if not seeds:
+        raise ValueError("need at least one seed")
+    return seeds
 
 
 class TrialResult(NamedTuple):
@@ -56,12 +69,7 @@ def run_trials(
     across trials; each trial gets its own PRNG stream, exactly as
     ``simulate(..., seed=s)`` would.
     """
-    if isinstance(seeds, (int, np.integer)):
-        seeds = tuple(range(int(seeds)))
-    else:
-        seeds = tuple(int(s) for s in seeds)
-    if not seeds:
-        raise ValueError("run_trials needs at least one seed")
+    seeds = _seed_tuple(seeds)
     n = c.n
     if syn is None:
         syn = build_synapses(c, cfg)
@@ -81,4 +89,55 @@ def run_trials(
                        state=carry.lif, records=records, seeds=seeds)
 
 
-__all__ = ["TrialResult", "run_trials"]
+class DistTrialResult(NamedTuple):
+    """Trial-batched distributed run; per-neuron data in original ids."""
+    counts: np.ndarray     # [B, n_orig] per-trial spike counts
+    dropped: np.ndarray    # [B]
+    state: Any             # LIFState, leaves [B, n_orig]
+    records: dict          # probe records, each [B, T, ...] (original ids)
+    stats: dict            # scheme counters, each [B]
+    seeds: tuple
+
+    def rates_hz(self, t_steps: int, dt_ms: float) -> np.ndarray:
+        """[B, n] per-trial per-neuron rates."""
+        return np.asarray(self.counts, np.float64) / (t_steps * dt_ms * 1e-3)
+
+    def mean_rates_hz(self, t_steps: int, dt_ms: float) -> np.ndarray:
+        """[n] trial-averaged rates — the parity-plot statistic."""
+        return self.rates_hz(t_steps, dt_ms).mean(axis=0)
+
+
+def run_dist_trials(
+    d,
+    cfg,
+    t_steps: int,
+    sugar_neurons: np.ndarray | None = None,
+    seeds: int | Sequence[int] = 10,
+    stimulus: Any | None = None,
+    probes: Any | None = None,
+    mesh=None,
+    emulate: bool = False,
+) -> DistTrialResult:
+    """Distributed counterpart of :func:`run_trials`: one partitioned
+    dispatch (vmap emulation or shard_map) covering the whole seed batch,
+    bit-identical to a Python loop of
+    :func:`repro.core.distributed.simulate_distributed` over the same
+    seeds.  ``d`` is a :class:`repro.core.dcsr.DCSR`, ``cfg`` a
+    :class:`repro.core.distributed.DistConfig`."""
+    from repro.core.distributed import _assemble, _run_partitioned
+    seeds = _seed_tuple(seeds)
+    # keys[p, b] = what simulate_distributed(seed=seeds[b]) hands part p
+    keys = jnp.stack(
+        [jax.random.split(jax.random.PRNGKey(s), d.n_parts) for s in seeds],
+        axis=1)                                          # [P, B, 2]
+    out, records, probes, owner = _run_partitioned(
+        d, cfg, t_steps, keys, sugar_neurons, stimulus, probes, mesh,
+        emulate, trials=True)
+    counts, dropped, state, recs, stats = _assemble(d, out, records, probes,
+                                                    owner)
+    return DistTrialResult(counts=counts, dropped=np.asarray(dropped),
+                           state=state, records=recs, stats=stats,
+                           seeds=seeds)
+
+
+__all__ = ["DistTrialResult", "TrialResult", "run_dist_trials", "run_trials"]

@@ -34,15 +34,19 @@ class BlockedSynapses:
         return int((self.blk_id < self.n_sb).sum())
 
 
-def build_blocked(c: Connectome, quantized: np.ndarray | None = None
-                  ) -> BlockedSynapses:
-    """Group the target-major CSR into dense tiles by (tgt//TB, src//SB)."""
-    n = c.n
-    n_tb = (n + TGT_BLK - 1) // TGT_BLK
-    n_sb = (n + SRC_BLK - 1) // SRC_BLK
-    w = (quantized if quantized is not None else c.in_weights).astype(np.float32)
-    tgt = np.repeat(np.arange(n, dtype=np.int64), c.fan_in)
-    src = c.in_indices.astype(np.int64)
+def tile_coo(tgt: np.ndarray, src: np.ndarray, w: np.ndarray,
+             n_tb: int, n_sb: int) -> tuple[np.ndarray, np.ndarray]:
+    """Group a (target, source, weight) COO into blocked-ELL dense tiles.
+
+    ``tgt`` indexes rows of an ``n_tb * TGT_BLK`` target space, ``src``
+    columns of an ``n_sb * SRC_BLK`` source space (local vs global spaces
+    are the caller's choice — the sharded builder passes local targets with
+    *global* sources, which is the per-partition blk_id remap).  Returns
+    ``(blk_id [n_tb, E], weights [n_tb, E, TGT_BLK, SRC_BLK])`` with E =
+    the widest target block's tile count and pad tiles pointing at the
+    zero spike block ``n_sb``.
+    """
+    tgt, src = tgt.astype(np.int64), src.astype(np.int64)
     tb, sb = tgt // TGT_BLK, src // SRC_BLK
 
     pair = tb * n_sb + sb
@@ -58,17 +62,77 @@ def build_blocked(c: Connectome, quantized: np.ndarray | None = None
     # slot index of each unique pair within its target block
     slot = np.arange(len(uniq_pairs)) - np.repeat(
         np.concatenate([[0], np.cumsum(tiles_per_tb)[:-1]]), tiles_per_tb)
-    pair_to_slot = dict(zip(uniq_pairs.tolist(), slot.tolist()))
     blk_id[(uniq_pairs // n_sb).astype(int), slot.astype(int)] = (
         uniq_pairs % n_sb)
     e_of_pair = np.empty(len(pair), dtype=np.int64)
     e_of_pair[order] = np.repeat(slot, np.diff(
         np.concatenate([first, [len(pair_s)]])))
     weights[tb, e_of_pair, tgt % TGT_BLK, src % SRC_BLK] += w
-    del pair_to_slot
+    return blk_id, weights
+
+
+def build_blocked(c: Connectome, quantized: np.ndarray | None = None
+                  ) -> BlockedSynapses:
+    """Group the target-major CSR into dense tiles by (tgt//TB, src//SB)."""
+    n = c.n
+    n_tb = (n + TGT_BLK - 1) // TGT_BLK
+    n_sb = (n + SRC_BLK - 1) // SRC_BLK
+    w = (quantized if quantized is not None else c.in_weights).astype(np.float32)
+    tgt = np.repeat(np.arange(n, dtype=np.int64), c.fan_in)
+    blk_id, weights = tile_coo(tgt, c.in_indices, w, n_tb, n_sb)
     occ = c.nnz / max(1, (blk_id < n_sb).sum() * TGT_BLK * SRC_BLK)
     return BlockedSynapses(blk_id=blk_id, weights=weights, n=n, n_tb=n_tb,
                            n_sb=n_sb, occupancy=float(occ))
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedBlockedSynapses:
+    """Per-partition tile stores over a DCSR mesh partitioning.
+
+    Targets are partition-local (rows of partition p's ``U``-slot slab);
+    sources stay *global*: ``blk_id[p]`` indexes the shared
+    ``n_sb``-block global spike-bitmap space — the per-partition remap
+    that lets each partition gate its own tiles against the one
+    event-reconstructed global spike vector.
+    """
+
+    blk_id: np.ndarray    # [P, n_tb, E] int32 global source-block per tile
+    weights: np.ndarray   # [P, n_tb, E, TGT_BLK, SRC_BLK] f32
+    n_tb: int             # local target blocks per partition (ceil U/TGT_BLK)
+    n_sb: int             # GLOBAL source blocks (ceil P*U/SRC_BLK)
+    occupancy: float      # nnz / stored-tile capacity over all partitions
+
+    @property
+    def tiles_stored(self) -> int:
+        return int((self.blk_id < self.n_sb).sum())
+
+
+def build_blocked_sharded(d) -> ShardedBlockedSynapses:
+    """Build stacked per-partition blocked-ELL stores from a DCSR snapshot
+    (weights as partitioned/quantized by ``build_dcsr``).  All partitions
+    share one tile width E = max over partitions so the stores stack into
+    uniform shard_map/vmap operands."""
+    P_, U = d.n_parts, d.part_size
+    n_glob = P_ * U
+    n_tb = (U + TGT_BLK - 1) // TGT_BLK
+    n_sb = (n_glob + SRC_BLK - 1) // SRC_BLK
+
+    valid = d.syn_src < n_glob
+    stores = [tile_coo(d.syn_tgt_local[p][valid[p]],
+                       d.syn_src[p][valid[p]],
+                       d.syn_w[p][valid[p]].astype(np.float32),
+                       n_tb, n_sb) for p in range(P_)]
+    # uniform E: pad every partition's store to the widest target block
+    E = max(b.shape[1] for b, _ in stores)
+    blk_id = np.full((P_, n_tb, E), n_sb, dtype=np.int32)
+    weights = np.zeros((P_, n_tb, E, TGT_BLK, SRC_BLK), dtype=np.float32)
+    for p, (b, w) in enumerate(stores):
+        blk_id[p, :, :b.shape[1]] = b
+        weights[p, :, :b.shape[1]] = w
+    nnz = int(valid.sum())
+    occ = nnz / max(1, (blk_id < n_sb).sum() * TGT_BLK * SRC_BLK)
+    return ShardedBlockedSynapses(blk_id=blk_id, weights=weights, n_tb=n_tb,
+                                  n_sb=n_sb, occupancy=float(occ))
 
 
 def pad_spike_blocks(spikes, n: int, n_sb: int):

@@ -29,9 +29,11 @@ from repro.configs.flywire import CONFIG, SMOKE             # noqa: E402
 from repro.core import (CoreBudget, caps_from_budget,       # noqa: E402
                         greedy_partition, synthetic_flywire_cached)
 from repro.core.dcsr import build_dcsr                      # noqa: E402
-from repro.core.distributed import (DistArrays, DistCarry,  # noqa: E402
-                                    DistConfig, _dist_step)
+from repro.core.distributed import AXIS, DistConfig         # noqa: E402
+from repro.core.exchange import (DistArrays, Topology,      # noqa: E402
+                                 get_scheme)
 from repro.core.partition import pad_to_uniform             # noqa: E402
+from repro.core.step import SimCarry, scan_steps            # noqa: E402
 from repro.launch.hlo import analyze_hlo                    # noqa: E402
 from repro.launch.mesh import make_flat_mesh                # noqa: E402
 
@@ -49,6 +51,7 @@ def abstract_dist_arrays(d, n_glob):
         out_indptr=sd((Pn, n_glob + 1), i32),
         out_tgt=sd((Pn, S), i32), out_w=sd((Pn, S), f32),
         pad_mask=sd((Pn, U), jnp.bool_),
+        src_gfo=sd((Pn, U), i32),
     )
 
 
@@ -90,16 +93,20 @@ def main():
           f"(prep {time.time()-t0:.0f}s)")
 
     mesh = make_flat_mesh(args.cores)
+    from repro.core.capacity import CapacityConfig
     cfg = DistConfig(sim=fw.sim, scheme=args.scheme,
-                     spike_capacity=args.capacity, syn_budget=args.budget)
+                     capacity=CapacityConfig(spike_capacity=args.capacity,
+                                             syn_budget=args.budget))
     Pn, U = d.n_parts, d.part_size
     arrs = abstract_dist_arrays(d, Pn * U)
     stim = abstract_stimulus(fw.sim, Pn, U)
     from repro.core.neuron import LIFState
+    from repro.exp.probes import NO_PROBES
     sd = jax.ShapeDtypeStruct
     keys_aval = jax.eval_shape(
         lambda: jax.random.split(jax.random.PRNGKey(0), Pn))
-    carry = DistCarry(
+    scheme = get_scheme(args.scheme)
+    carry = SimCarry(
         lif=LIFState(v=sd((Pn, U), jnp.int32), g=sd((Pn, U), jnp.int32),
                      refrac=sd((Pn, U), jnp.int32)),
         ring=sd((Pn, fw.sim.params.delay_steps, U), jnp.bool_),
@@ -109,18 +116,17 @@ def main():
         dropped=sd((Pn,), jnp.int32),
         # state structure must match the stimulus (Compose.step zips them)
         stim=stim.init_state(U),
+        stats=scheme.init_stats(),
     )
+    topo = Topology(Pn, U, axis=AXIS)
 
     def run_window(carry_in, arr, st):
         carry_in = jax.tree.map(lambda x: x[0], carry_in)
         arr = jax.tree.map(lambda x: x[0], arr)
         st = jax.tree.map(lambda x: x[0], st)
-
-        def body(cc, t):
-            return _dist_step(cc, t, arrs=arr, stim=st, cfg=cfg, P_=Pn,
-                              U=U, axis="cores")
-        cc, _ = jax.lax.scan(body, carry_in,
-                             jnp.arange(args.steps, dtype=jnp.int32))
+        cc, _ = scan_steps(scheme, arr, carry_in, st, cfg.sim, cfg.capacity,
+                           topo, NO_PROBES, args.steps,
+                           pad_mask=arr.pad_mask)
         return jax.tree.map(lambda x: x[None], cc)
 
     spec_c = jax.tree.map(lambda _: P("cores"), carry)

@@ -7,11 +7,13 @@
 
 --scenario selects a registered stimulus scenario (repro.exp.scenarios);
 --trials > 1 runs a vmapped seed batch — one compiled call — and reports
-trial-averaged rates.  --distributed partitions with the paper's greedy
-capacity scheme and runs the shard_map simulator with the same stimulus
-pytree (one partition per host device; set
+trial-averaged rates (on the distributed path too: the unified step core
+batches the partitioned scan the same way).  --distributed partitions
+with the paper's greedy capacity scheme and runs the shard_map simulator
+with the same stimulus pytree (one partition per host device; set
 XLA_FLAGS=--xla_force_host_platform_device_count=N first, or use
---emulate).
+--emulate); --dist-scheme selects the registered exchange scheme
+(bitmap | event | blocked).
 """
 
 from __future__ import annotations
@@ -29,7 +31,7 @@ from repro.core import (CoreBudget, SimConfig, caps_from_budget,
 from repro.core.dcsr import build_dcsr
 from repro.core.distributed import DistConfig, simulate_distributed
 from repro.exp import (available_scenarios, build_scenario, get_scenario,
-                       run_trials)
+                       run_dist_trials, run_trials)
 
 
 def main():
@@ -52,6 +54,9 @@ def main():
     ap.add_argument("--distributed", action="store_true")
     ap.add_argument("--emulate", action="store_true")
     ap.add_argument("--cores", type=int, default=4)
+    from repro.core import available_schemes
+    ap.add_argument("--dist-scheme", default="event",
+                    choices=sorted(set(available_schemes()) - {"local"}))
     args = ap.parse_args()
 
     fw = {"smoke": SMOKE, "bench": dataclasses.replace(
@@ -83,24 +88,30 @@ def main():
     print(f"[simulate] scenario {scen.name!r}: {scen.description}")
 
     if args.distributed:
-        if args.trials > 1:
-            print("[simulate] note: --trials is not batched on the "
-                  "distributed path; running a single trial")
         caps = caps_from_budget(CoreBudget.tpu_vmem(), "sar")
         p = greedy_partition(c, caps, scheme="sar")
         from repro.core.partition import pad_to_uniform
         p = pad_to_uniform(p, args.cores, c.n)
         d = build_dcsr(c, p, quantize_bits=cfg.quantize_bits)
         print(f"[simulate] distributed over {d.n_parts} partitions "
-              f"(U={d.part_size}, S_max={d.s_max})")
-        dcfg = DistConfig(sim=cfg, scheme="event")
+              f"(U={d.part_size}, S_max={d.s_max}, "
+              f"scheme={args.dist_scheme})")
+        dcfg = DistConfig(sim=cfg, scheme=args.dist_scheme)
         t0 = time.time()
-        res = simulate_distributed(d, dcfg, t_steps, seed=0,
-                                   emulate=args.emulate, stimulus=stim)
-        mean_counts = res.counts.astype(np.float64)
-        dropped = res.dropped
-        print(f"[simulate] {t_steps} steps in {time.time()-t0:.2f}s "
-              f"(dropped={dropped})")
+        if args.trials > 1:
+            res = run_dist_trials(d, dcfg, t_steps, seeds=args.trials,
+                                  emulate=args.emulate, stimulus=stim)
+            mean_counts = np.asarray(res.counts, np.float64).mean(axis=0)
+            dropped = int(np.asarray(res.dropped).sum())
+        else:
+            res = simulate_distributed(d, dcfg, t_steps, seed=0,
+                                       emulate=args.emulate, stimulus=stim)
+            mean_counts = res.counts.astype(np.float64)
+            dropped = res.dropped
+        stats = "".join(f" {k}={int(np.asarray(v).sum())}"
+                        for k, v in res.stats.items())
+        print(f"[simulate] {max(args.trials, 1)} trial(s) x {t_steps} steps "
+              f"in {time.time()-t0:.2f}s (dropped={dropped}{stats})")
     else:
         t0 = time.time()
         res = run_trials(c, cfg, t_steps, stimulus=stim, seeds=args.trials)

@@ -70,7 +70,8 @@ def test_distributed_event_overflow_exact_vs_numpy(setup):
     the global fan-out of spikes beyond the event capacity) must match a
     numpy reference exactly."""
     from repro.core.compaction import derived_block_capacity, two_level_active
-    from repro.core.distributed import _deliver_events, build_dist_arrays
+    from repro.core.exchange import build_dist_arrays
+    from repro.core.exchange.event import deliver_events
     from test_compaction import np_two_level
 
     c, _, d = setup
@@ -98,7 +99,7 @@ def test_distributed_event_overflow_exact_vs_numpy(setup):
 
         total_drop = 0
         for p in range(P_):
-            g, bdrop = _deliver_events(
+            g, bdrop = deliver_events(
                 events, arrs.out_indptr[p], arrs.out_tgt[p], arrs.out_w[p],
                 U, n_glob, budget)
             flat = np.concatenate(
@@ -141,18 +142,28 @@ SHARD_MAP_SCRIPT = textwrap.dedent("""
     sugar = np.arange(20)
     d = build_dcsr(c, even_partition(c, 4))
     sim = SimConfig(engine="csr")
-    for scheme in ("bitmap", "event"):
+    for scheme in ("bitmap", "event", "blocked"):
         cfg = DistConfig(sim=sim, scheme=scheme)
         emu = simulate_distributed(d, cfg, 200, sugar, seed=3, emulate=True)
         real = simulate_distributed(d, cfg, 200, sugar, seed=3, emulate=False)
         assert (emu.counts == real.counts).all(), scheme
+        assert emu.stats.keys() == real.stats.keys()
         print(scheme, "ok", int(real.counts.sum()))
+
+    # trial batching under real shard_map matches sequential runs
+    from repro.exp import run_dist_trials
+    cfg = DistConfig(sim=sim, scheme="event")
+    tr = run_dist_trials(d, cfg, 100, sugar, seeds=[3, 11], emulate=False)
+    for i, s in enumerate((3, 11)):
+        one = simulate_distributed(d, cfg, 100, sugar, seed=s, emulate=False)
+        assert (tr.counts[i] == one.counts).all()
+    print("trials ok", int(tr.counts.sum()))
 """)
 
 
 def test_shard_map_matches_emulation(tmp_path):
     """The real shard_map execution on 4 host devices is bit-identical to
-    the vmap emulation."""
+    the vmap emulation, for every exchange scheme."""
     script = tmp_path / "run_shard_map.py"
     script.write_text(SHARD_MAP_SCRIPT)
     env = dict(os.environ)
@@ -161,4 +172,5 @@ def test_shard_map_matches_emulation(tmp_path):
                          text=True, timeout=600, env=env,
                          cwd=os.path.join(os.path.dirname(__file__), ".."))
     assert out.returncode == 0, out.stderr[-2000:]
-    assert "bitmap ok" in out.stdout and "event ok" in out.stdout
+    for tag in ("bitmap ok", "event ok", "blocked ok", "trials ok"):
+        assert tag in out.stdout, out.stdout

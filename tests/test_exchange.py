@@ -1,0 +1,353 @@
+"""The unified step core + exchange-scheme registry (PR 4 acceptance).
+
+Pins: (a) the refactor is invisible — ``simulate_distributed(...,
+emulate=True)`` is bit-identical to the pre-refactor implementation on the
+pinned legacy scenario (golden hashes captured from the old monolithic
+distributed step before its deletion); (b) the sharded ``blocked`` scheme
+is count-parity with ``event``;
+(c) the distributed path has full observability parity with the
+monolithic one (probe records, trials batching), and pad neurons never
+leak into any record or count; (d) the capacity knobs and legacy
+observability aliases are deprecated-but-working shims.
+"""
+
+import dataclasses
+import hashlib
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import given, requires_hypothesis, settings, st
+from repro.core import (CapacityConfig, SimConfig, available_schemes,
+                        get_scheme, simulate, synthetic_flywire)
+from repro.core.dcsr import build_dcsr
+from repro.core.distributed import DistConfig, simulate_distributed
+from repro.core.exchange import build_dist_arrays
+from repro.core.partition import even_partition
+from repro.exp import (Compose, ProbeSpec, StepCurrent, per_neuron,
+                       run_dist_trials)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    c = synthetic_flywire(n=1600, target_synapses=48_000, seed=8)
+    sugar = np.arange(20)
+    d = build_dcsr(c, even_partition(c, 4))
+    return c, sugar, d
+
+
+def _sha(counts) -> str:
+    return hashlib.sha256(
+        np.ascontiguousarray(counts).tobytes()).hexdigest()[:16]
+
+
+# --------------------------------------------------------------------------
+# Registry + pinned pre-refactor bit-identity
+# --------------------------------------------------------------------------
+
+def test_exchange_registry():
+    assert {"local", "bitmap", "event", "blocked"} <= set(available_schemes())
+    assert get_scheme("event").name == "event"
+    with pytest.raises(ValueError, match="unknown exchange scheme"):
+        get_scheme("no-such-scheme")
+    # the monolithic-only scheme is rejected on the distributed entry point
+    c = synthetic_flywire(n=300, target_synapses=3_000, seed=0)
+    d = build_dcsr(c, even_partition(c, 2))
+    with pytest.raises(ValueError, match="unknown distributed"):
+        simulate_distributed(d, DistConfig(sim=SimConfig(), scheme="local"),
+                             5, emulate=True)
+
+
+# Golden values captured from the pre-refactor distributed step (commit
+# 7535a45) on the pinned legacy scenario: n=1600/48k syn/seed 8, P=4,
+# sugar=arange(20), T=300, seed=3.
+LEGACY_GOLDEN = {
+    # (fixed_point) -> (counts.sum, dropped, sha256(counts)[:16])
+    False: (71, 0, "d61052e7e462f364"),
+    True: (43, 0, "afc740145ec1128d"),
+}
+
+
+@pytest.mark.parametrize("scheme", ["bitmap", "event"])
+@pytest.mark.parametrize("fx", [False, True])
+def test_emulated_distributed_bit_identical_to_pre_refactor(setup, scheme, fx):
+    """Acceptance: the unified step core returns bit-identical counts and
+    drops to the deleted per-path step body on the pinned legacy
+    scenario."""
+    c, sugar, d = setup
+    sim = SimConfig(engine="csr", fixed_point=fx, poisson_to_v=not fx,
+                    quantize_bits=9 if fx else None)
+    r = simulate_distributed(d, DistConfig(sim=sim, scheme=scheme), 300,
+                             sugar, seed=3, emulate=True)
+    want_sum, want_drop, want_sha = LEGACY_GOLDEN[fx]
+    assert int(r.counts.sum()) == want_sum
+    assert r.dropped == want_drop
+    assert _sha(r.counts) == want_sha
+
+
+def test_overflow_drops_bit_identical_to_pre_refactor(setup):
+    """Same pin under capacity starvation: exact drop accounting survived
+    the move into the exchange layer."""
+    c, sugar, d = setup
+    sim = SimConfig(engine="csr", background_rate_hz=300.0)
+    r = simulate_distributed(
+        d, DistConfig(sim=sim, scheme="event",
+                      capacity=CapacityConfig(4, 256, 0)),
+        50, sugar, seed=0, emulate=True)
+    assert (int(r.counts.sum()), r.dropped) == (1556, 15358)
+    assert _sha(r.counts) == "7c5be7664662758f"
+
+
+# --------------------------------------------------------------------------
+# Sharded blocked scheme
+# --------------------------------------------------------------------------
+
+def test_blocked_scheme_count_parity_with_event(setup):
+    """The ROADMAP item's acceptance: tile-granular delivery over the
+    per-partition blk_id remap is a storage change, not an approximation —
+    counts are bit-identical to the event scheme (integer weights sum
+    exactly in f32)."""
+    c, sugar, d = setup
+    sim = SimConfig(engine="csr")
+    e = simulate_distributed(d, DistConfig(sim=sim, scheme="event"), 200,
+                             sugar, seed=3, emulate=True)
+    b = simulate_distributed(d, DistConfig(sim=sim, scheme="blocked"), 200,
+                             sugar, seed=3, emulate=True)
+    np.testing.assert_array_equal(e.counts, b.counts)
+    assert b.dropped == 0
+
+
+def test_blocked_scheme_tile_stats_track_sparsity(setup):
+    """tiles_live/tiles_skipped counters: conserved per step (live +
+    skipped == stored), and sparser activity skips more tiles."""
+    from repro.kernels.spike_prop.ops import build_blocked_sharded
+    c, sugar, d = setup
+    stored = build_blocked_sharded(d).tiles_stored
+    T = 100
+
+    def run(background_hz):
+        sim = SimConfig(engine="csr", poisson_rate_hz=0.0,
+                        background_rate_hz=background_hz)
+        return simulate_distributed(
+            d, DistConfig(sim=sim, scheme="blocked"), T, None, seed=0,
+            emulate=True)
+
+    quiet, busy = run(2.0), run(80.0)
+    for r in (quiet, busy):
+        assert int(r.stats["tiles_live"] + r.stats["tiles_skipped"]) \
+            == stored * T
+    assert int(quiet.stats["tiles_live"]) < int(busy.stats["tiles_live"])
+
+
+def test_blocked_scheme_quantized_matches_bitmap(setup):
+    """Weights quantized by build_dcsr flow identically through the dense
+    tiles and the flat in-CSR."""
+    c, sugar, _ = setup
+    d9 = build_dcsr(c, even_partition(c, 4), quantize_bits=9)
+    sim = SimConfig(engine="csr", quantize_bits=9, fixed_point=True,
+                    poisson_to_v=False)
+    a = simulate_distributed(d9, DistConfig(sim=sim, scheme="bitmap"), 150,
+                             sugar, seed=5, emulate=True)
+    b = simulate_distributed(d9, DistConfig(sim=sim, scheme="blocked"), 150,
+                             sugar, seed=5, emulate=True)
+    np.testing.assert_array_equal(a.counts, b.counts)
+
+
+# --------------------------------------------------------------------------
+# Distributed observability parity (satellite: probe records)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fx", [False, True])
+@pytest.mark.parametrize("scheme", ["bitmap", "event", "blocked"])
+def test_probe_record_parity_monolithic_vs_distributed(setup, scheme, fx):
+    """Under a deterministic stimulus the network evolution is identical,
+    so every probe record must match the monolithic run after the
+    inv_perm mapping: raster and voltage bit-exactly, pop-rate to float
+    tolerance, drops exactly."""
+    c, _, d = setup
+    ids = (3, 100, 777, 1599)
+    stim = Compose((StepCurrent(weights=per_neuron(np.arange(40), 90.0, c.n),
+                                t_on=5, t_off=60),))
+    probes = ProbeSpec(raster=True, voltage=ids, pop_rate=True, drops=True)
+    cfg = SimConfig(engine="csr", fixed_point=fx,
+                    quantize_bits=9 if fx else None)
+    T = 80
+    mono = simulate(c, cfg, T, stimulus=stim, probes=probes, seed=0)
+    dist = simulate_distributed(d, DistConfig(sim=cfg, scheme=scheme), T,
+                                stimulus=stim, probes=probes, seed=0,
+                                emulate=True)
+    assert int(np.asarray(mono.counts).sum()) > 0
+    np.testing.assert_array_equal(np.asarray(mono.counts), dist.counts)
+    np.testing.assert_array_equal(np.asarray(mono.raster), dist.raster)
+    np.testing.assert_array_equal(np.asarray(mono.records["v"]),
+                                  dist.records["v"])
+    np.testing.assert_allclose(np.asarray(mono.records["pop_rate_hz"]),
+                               dist.records["pop_rate_hz"], rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(mono.records["dropped"]),
+                                  dist.records["dropped"])
+    # full SimResult shape: final LIF state mapped back per neuron
+    np.testing.assert_array_equal(np.asarray(mono.state.v),
+                                  np.asarray(dist.state.v))
+
+
+def test_dist_voltage_probe_out_of_range(setup):
+    c, _, d = setup
+    with pytest.raises(ValueError, match="out of range"):
+        simulate_distributed(d, DistConfig(sim=SimConfig(engine="csr")), 5,
+                             emulate=True,
+                             probes=ProbeSpec(voltage=(c.n,)))
+
+
+def test_dist_trials_match_sequential(setup):
+    """run_dist_trials == the same seeds run one by one (emulated)."""
+    c, sugar, d = setup
+    cfg = DistConfig(sim=SimConfig(engine="csr", background_rate_hz=10.0),
+                     scheme="event")
+    seeds = [3, 11, 42]
+    batch = run_dist_trials(d, cfg, 120, sugar, seeds=seeds, emulate=True,
+                            probes=ProbeSpec(raster=True))
+    assert batch.counts.shape == (3, c.n)
+    assert batch.records["raster"].shape == (3, 120, c.n)
+    for i, s in enumerate(seeds):
+        one = simulate_distributed(d, cfg, 120, sugar, seed=s, emulate=True)
+        np.testing.assert_array_equal(batch.counts[i], one.counts)
+        assert int(batch.dropped[i]) == one.dropped
+        np.testing.assert_array_equal(batch.state.v[i],
+                                      np.asarray(one.state.v))
+    np.testing.assert_array_equal(
+        batch.records["raster"].sum(axis=1), batch.counts)
+
+
+# --------------------------------------------------------------------------
+# Pad-neuron property (satellite: distributed observability tests)
+# --------------------------------------------------------------------------
+
+@requires_hypothesis
+@settings(max_examples=6, deadline=None)
+@given(n=st.sampled_from([301, 640, 1100]), n_parts=st.sampled_from([2, 3, 5]),
+       seed=st.integers(min_value=0, max_value=3))
+def test_pad_neurons_never_in_any_record_or_count(n, n_parts, seed):
+    """Property: whatever the (n, P, seed) geometry — including partition
+    sizes that force heavy padding — pad slots never spike, never count,
+    and never reach any probe record."""
+    from repro.core.distributed import _run_partitioned
+    import jax
+    c = synthetic_flywire(n=n, target_synapses=6 * n, seed=seed)
+    d = build_dcsr(c, even_partition(c, n_parts))
+    cfg = DistConfig(sim=SimConfig(engine="csr", background_rate_hz=200.0),
+                     scheme="event")
+    keys = jax.random.split(jax.random.PRNGKey(seed), d.n_parts)
+    out, records, _probes, _owner = _run_partitioned(
+        d, cfg, 25, keys, None, None, ProbeSpec(raster=True), None,
+        emulate=True, trials=False)
+    pad = d.inv_perm.reshape(d.n_parts, d.part_size) < 0
+    counts = np.asarray(out.counts)              # [P, U]
+    raster = np.asarray(records["raster"])       # [P, T, U]
+    assert counts.sum() > 0                      # the drive elicits spikes
+    assert counts[pad].sum() == 0
+    assert not raster.transpose(0, 2, 1)[pad].any()
+    # and the mapped-back result carries every real spike, none invented
+    res = simulate_distributed(d, cfg, 25, None, seed=seed, emulate=True,
+                               probes=ProbeSpec(raster=True))
+    assert res.counts.sum() == counts.sum()
+    assert res.raster.sum() == raster.sum()
+
+
+# --------------------------------------------------------------------------
+# build_dist_arrays: vectorized + memoized (satellite)
+# --------------------------------------------------------------------------
+
+def _ref_dist_arrays(d):
+    """The pre-vectorization per-partition loop, kept as the oracle."""
+    P_, U, S = d.n_parts, d.part_size, d.s_max
+    n_glob = P_ * U
+    out_indptr = np.zeros((P_, n_glob + 1), dtype=np.int32)
+    out_tgt = np.full((P_, S), U, dtype=np.int32)
+    out_w = np.zeros((P_, S), dtype=np.float32)
+    for p in range(P_):
+        valid = d.syn_src[p] < n_glob
+        src = d.syn_src[p][valid]
+        order = np.argsort(src, kind="stable")
+        m = len(src)
+        out_tgt[p, :m] = d.syn_tgt_local[p][valid][order]
+        out_w[p, :m] = d.syn_w[p][valid][order]
+        counts = np.bincount(src[order], minlength=n_glob)
+        np.cumsum(counts, out=out_indptr[p, 1:])
+    gfo = np.diff(out_indptr, axis=1).sum(axis=0).astype(np.int32)
+    return out_indptr, out_tgt, out_w, gfo.reshape(P_, U)
+
+
+def test_build_dist_arrays_matches_reference_loop(setup):
+    c, _, d = setup
+    arrs = build_dist_arrays(d)
+    indptr, tgt, w, gfo = _ref_dist_arrays(d)
+    np.testing.assert_array_equal(np.asarray(arrs.out_indptr), indptr)
+    np.testing.assert_array_equal(np.asarray(arrs.out_tgt), tgt)
+    np.testing.assert_array_equal(np.asarray(arrs.out_w), w)
+    np.testing.assert_array_equal(np.asarray(arrs.src_gfo), gfo)
+    np.testing.assert_array_equal(
+        np.asarray(arrs.pad_mask), d.inv_perm.reshape(d.n_parts, -1) >= 0)
+
+
+def test_build_dist_arrays_memoized_on_dcsr(setup):
+    c, _, d = setup
+    assert build_dist_arrays(d) is build_dist_arrays(d)
+    # a different snapshot gets its own entry
+    d2 = build_dcsr(c, even_partition(c, 2))
+    assert build_dist_arrays(d2) is not build_dist_arrays(d)
+
+
+# --------------------------------------------------------------------------
+# Capacity dedup + deprecation shims (satellites)
+# --------------------------------------------------------------------------
+
+def test_capacity_config_routes_both_configs():
+    cap = CapacityConfig(spike_capacity=33, syn_budget=4444,
+                         block_capacity=7)
+    sim = SimConfig(engine="event", **cap.as_config_kwargs())
+    assert sim.capacity == cap
+    # replace() with a new capacity must take effect (no stale-mirror
+    # clobber) and stay silent
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        swapped = dataclasses.replace(
+            sim, capacity=CapacityConfig(spike_capacity=1024))
+    assert swapped.capacity.spike_capacity == 1024
+    dc = DistConfig(sim=sim, capacity=cap)
+    assert dc.capacity == cap
+    # historical defaults preserved per config
+    assert SimConfig().capacity == CapacityConfig(512, 65_536, 0)
+    assert DistConfig(sim=SimConfig()).capacity == CapacityConfig(256, 32_768, 0)
+
+
+def test_legacy_capacity_fields_warn_and_still_work():
+    with pytest.warns(DeprecationWarning, match="syn_budget"):
+        cfg = SimConfig(engine="event", syn_budget=256)
+    assert cfg.capacity.syn_budget == 256
+    assert cfg.capacity.spike_capacity == 512     # untouched default
+    with pytest.warns(DeprecationWarning, match="spike_capacity"):
+        dc = DistConfig(sim=SimConfig(), spike_capacity=4, syn_budget=99)
+    assert (dc.capacity.spike_capacity, dc.capacity.syn_budget) == (4, 99)
+    # replace() round-trips silently (the shims are consumed at init)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        cfg2 = dataclasses.replace(cfg, background_rate_hz=5.0)
+        # and an explicitly replaced capacity wins even on a config that
+        # was originally built through a legacy shim
+        cfg3 = dataclasses.replace(
+            cfg, capacity=CapacityConfig(syn_budget=9999))
+    assert cfg2.capacity == cfg.capacity
+    assert cfg3.capacity.syn_budget == 9999
+
+
+def test_legacy_observability_aliases_warn():
+    c = synthetic_flywire(n=300, target_synapses=3_000, seed=1)
+    with pytest.warns(DeprecationWarning, match="collect_raster"):
+        cfg = SimConfig(engine="csr", collect_raster=True)
+    with pytest.warns(DeprecationWarning, match="sugar_neurons"):
+        simulate(c, SimConfig(engine="csr"), 5, np.arange(5))
+    # the aliases still behave
+    res = simulate(c, cfg, 5, stimulus=Compose(()))
+    assert res.raster is not None and res.raster.shape == (5, c.n)
