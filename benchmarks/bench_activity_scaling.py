@@ -21,7 +21,11 @@ via ``ProbeSpec(raster=True)`` (per-step record stacking + host fetch).
 The distributed exchange schemes (``engine_step.dist.<scheme>.P4``,
 vmap-emulated on one device) extend the trajectory across the partition
 cut; the sharded ``blocked`` row additionally records the tile-gating
-metric (tiles skipped/step ∝ sparsity).
+metric (tiles skipped/step ∝ sparsity).  The fused delivery->LIF rows
+(``engine_step.blocked_fused.*``, interpret mode at small n like every
+blocked-kernel CPU row) pin the one-kernel step composition — float32
+and the Q19.12 int32 path — so a regression in the fused fast path shows
+up in the trajectory, not just in the bit-identity tests.
 
 ``smoke=True`` shrinks every scale knob to CI size: a harness-breakage
 canary (imports, retracing, capacity plumbing), not a measurement.
@@ -59,6 +63,12 @@ DIST_P = 4
 DIST_RATE = 0.5
 DIST_BLOCKED_N = 2_000
 DIST_BLOCKED_RATES = (0.5, 40.0)
+# fused delivery->LIF rows: like the blocked rows, the compiled tile path
+# is TPU-only, so CPU times the interpret fallback at a small n and the
+# row's point is the fused-vs-unfused step composition (no HBM round-trip
+# between delivery and integration), not absolute speed
+FUSED_N = 2_000
+FUSED_RATES = (0.5, 40.0)
 # stimulus-diversity trajectory points (scenario name -> params);
 # sugar_feeding rows are reused from the table1.sugar block, not re-timed
 SCENARIOS = {
@@ -165,6 +175,56 @@ def run(full: bool = False, smoke: bool = False):
                     f"{ms_by_n[n1]/ms_by_n[n0]:.2f}x",
                     f"event ms/step growth over {n1/n0:.0f}x n at "
                     f"{NSCALE_RATE}hz (sublinear: << n ratio)"))
+
+    # --- fused delivery->LIF (blocked_fused): one kernel per step runs
+    #     spike->gather->accumulate->integrate->threshold per 128-row
+    #     block; engine_step.blocked_fused.* rows pin the fused-step
+    #     trajectory at the standard sweep rates (interpret mode on CPU —
+    #     small n, composition canary; the VMEM-residency win is a TPU
+    #     measurement) ---
+    nf = 1_000 if smoke else FUSED_N
+    cf = synthetic_flywire_cached(n=nf, seed=0, target_synapses=30 * nf)
+    t_fused = 10 if smoke else 50
+    fused_ms = {}
+    for rate in FUSED_RATES:
+        for engine in ("blocked", "blocked_fused"):
+            cfgf = SimConfig(engine=engine, quantize_bits=9,
+                             poisson_rate_hz=0.0)
+            stimf = build_scenario("activity_sweep", cf, cfgf,
+                                   background_hz=rate)
+            synf = build_synapses(cf, cfgf)
+            res = _run_sim(cf, cfgf, synf, stimf, t_fused)
+            t = timeit(lambda: _run_sim(cf, cfgf, synf, stimf, t_fused),
+                       iters=2)
+            fused_ms[(engine, rate)] = t / t_fused * 1e3
+            if engine == "blocked_fused":
+                rows.append(row(
+                    f"engine_step.blocked_fused.{rate}hz",
+                    f"{t_fused/t:.1f}",
+                    f"steps/sec interpret-mode ({t/t_fused*1e3:.3f} ms/step,"
+                    f" n={nf}, scenario=activity_sweep, dropped="
+                    f"{int(res.dropped)}; delivery+LIF fused in one kernel,"
+                    f" currents never leave VMEM — compiled path TPU-only)"))
+    # Q19.12 fused row: the Loihi-faithful int32 pipeline through the same
+    # fused kernel
+    cfgq = SimConfig(engine="blocked_fused", quantize_bits=9,
+                     fixed_point=True, poisson_to_v=False,
+                     poisson_rate_hz=0.0)
+    stimq = build_scenario("activity_sweep", cf, cfgq,
+                           background_hz=min(FUSED_RATES))
+    synq = build_synapses(cf, cfgq)
+    _run_sim(cf, cfgq, synq, stimq, t_fused)
+    tq = timeit(lambda: _run_sim(cf, cfgq, synq, stimq, t_fused), iters=2)
+    rows.append(row(f"engine_step.blocked_fused.fx.{min(FUSED_RATES)}hz",
+                    f"{t_fused/tq:.1f}",
+                    f"steps/sec interpret-mode ({tq/t_fused*1e3:.3f} "
+                    f"ms/step, n={nf}, int32 Q19.12 fused path)"))
+    lo = min(FUSED_RATES)
+    rows.append(row("fused.step_vs_unfused_blocked",
+                    f"{fused_ms[('blocked', lo)]/fused_ms[('blocked_fused', lo)]:.2f}x",
+                    f"unfused/fused ms-per-step at {lo}hz, n={nf} "
+                    f"(interpret-mode composition canary; the HBM "
+                    f"round-trip saving is a TPU measurement)"))
 
     # --- distributed exchange schemes (unified step core, emulated P=4):
     #     engine_step.dist.<scheme>.P4 extends the trajectory across the

@@ -1,0 +1,88 @@
+"""Validate BENCH_*.json files against the checked-in contract.
+
+    python -m benchmarks.check_schema PATH [PATH ...]
+
+Interprets the subset of JSON Schema used by ``benchmarks/schema.json``
+(type / required / properties / additionalProperties / items /
+minProperties / pattern-in-not) with zero dependencies, so CI can gate
+the benchmark-smoke artifact on it: required meta keys present (host
+stamp included — steps/sec from unidentified machines must never enter a
+trajectory), every row a ``{name, value, derived}`` record, and no
+``*.error`` rows (a module that raised must fail the build, not ship a
+poisoned artifact).  Exit code is the number of invalid files.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+import sys
+from pathlib import Path
+
+_TYPES = {"object": dict, "array": list, "string": str, "boolean": bool}
+
+
+def _check(node, schema: dict, path: str, errors: list[str]) -> None:
+    want = schema.get("type")
+    if want is not None:
+        py = _TYPES[want]
+        # bool is an int subclass; "boolean" must not accept ints and
+        # vice versa — benchmark meta relies on real booleans
+        ok = isinstance(node, py) and not (py is not bool
+                                           and isinstance(node, bool))
+        if not ok:
+            errors.append(f"{path}: expected {want}, got "
+                          f"{type(node).__name__}")
+            return
+    neg = schema.get("not")
+    if neg and isinstance(node, str) and re.search(neg["pattern"], node):
+        errors.append(f"{path}: value {node!r} matches forbidden pattern "
+                      f"{neg['pattern']!r}")
+    if isinstance(node, dict):
+        for key in schema.get("required", []):
+            if key not in node:
+                errors.append(f"{path}: missing required key {key!r}")
+        if len(node) < schema.get("minProperties", 0):
+            errors.append(f"{path}: wants >= {schema['minProperties']} "
+                          f"entries, has {len(node)}")
+        props = schema.get("properties", {})
+        extra = schema.get("additionalProperties")
+        for key, val in node.items():
+            sub = props.get(key, extra if isinstance(extra, dict) else None)
+            if sub:
+                _check(val, sub, f"{path}.{key}", errors)
+    elif isinstance(node, list) and "items" in schema:
+        for i, val in enumerate(node):
+            _check(val, schema["items"], f"{path}[{i}]", errors)
+
+
+def validate_file(path: str, schema: dict) -> list[str]:
+    try:
+        payload = json.loads(Path(path).read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable ({e})"]
+    errors: list[str] = []
+    _check(payload, schema, "$", errors)
+    return [f"{path} {e}" for e in errors]
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        sys.exit("usage: python -m benchmarks.check_schema BENCH.json [...]")
+    schema = json.loads(
+        (Path(__file__).parent / "schema.json").read_text())
+    bad = 0
+    for path in argv:
+        errors = validate_file(path, schema)
+        if errors:
+            bad += 1
+            print(f"FAIL {path}")
+            for e in errors:
+                print(f"  {e}")
+        else:
+            print(f"ok   {path}")
+    return bad
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

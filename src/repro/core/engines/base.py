@@ -69,7 +69,17 @@ def register_state(cls):
 
 @runtime_checkable
 class DeliveryEngine(Protocol):
-    """One synaptic-delivery strategy (see module docstring)."""
+    """One synaptic-delivery strategy (see module docstring).
+
+    Capability flag: an engine that sets ``integrates_lif = True`` fuses
+    the LIF neuron update into delivery itself and must provide
+    ``deliver_fused(state, spikes, lif, drive, cfg) -> (new_lif,
+    spikes [n] bool, dropped i32)``.  The shared step body
+    (:mod:`repro.core.step`) then calls ``deliver_fused`` *instead of*
+    ``deliver`` + the separate LIF update — the flag is what guarantees
+    integration happens exactly once per step (never zero, never twice).
+    Engines without the attribute are unfused (the default).
+    """
 
     name: str
 
@@ -105,6 +115,13 @@ def get_engine(name: str) -> DeliveryEngine:
 
 def available_engines() -> list[str]:
     return sorted(_REGISTRY)
+
+
+def engine_integrates_lif(name: str) -> bool:
+    """True iff ``name``'s engine fuses the LIF update into delivery (the
+    ``integrates_lif`` capability) — the one place exchange schemes ask
+    whether the step body's separate LIF update must be skipped."""
+    return bool(getattr(get_engine(name), "integrates_lif", False))
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,45 @@
+"""Blocked-fused engine: delivery AND LIF integration in one Pallas kernel.
+
+Same 128×128 tile store as the :mod:`blocked <repro.core.engines.blocked>`
+engine, but the per-step kernel runs the whole
+spike→gather→accumulate→integrate→threshold pipeline per target-row block
+without the delivered current ever leaving VMEM — the TPU rendering of the
+paper's core locality claim (on Loihi 2 spike delivery and neuron update
+share one per-core memory, with no dense-memory-hierarchy round-trip).
+The block-level tile-skip mask (``repro.core.compaction``'s first-level
+any-spike reduce) is likewise derived inside the kernel from the
+VMEM-resident spike block.
+
+This is the first engine with the ``integrates_lif`` capability: the
+shared step body (:mod:`repro.core.step`) sees the flag through the
+``local`` exchange scheme and calls :meth:`deliver_fused` *instead of*
+``deliver`` + ``apply_drive``, so the LIF update runs exactly once.  Both
+precisions are bit-identical to the unfused blocked + ``lif_step`` /
+``lif_step_fx`` composition (pinned in tests/test_fused.py); the int32
+Q19.12 path is the Loihi-faithful one.  ``deliver`` is inherited unfused
+for generic parity tooling — the step body never calls it for this
+engine.
+"""
+
+from __future__ import annotations
+
+from .base import register
+from .blocked import BlockedEngine, BlockedState
+
+
+@register
+class BlockedFusedEngine(BlockedEngine):
+    name = "blocked_fused"
+    integrates_lif = True        # step body must skip its own lif_update
+
+    def deliver_fused(self, state: BlockedState, spikes, lif, drive, cfg):
+        """spikes [n] bool, lif LIFState, drive StimDrive ->
+        (new_lif, spikes [n] bool, dropped i32)."""
+        import jax.numpy as jnp
+
+        from repro.kernels.spike_prop.ops import fused_step, spike_blocks
+        spk_pad = spike_blocks(spikes, state.n, state.n_sb)
+        new_lif, out = fused_step(
+            state.blk_id, state.weights, spk_pad, lif, drive, state.n,
+            cfg.params, cfg.fixed_point, state.interpret)
+        return new_lif, out, jnp.int32(0)

@@ -12,7 +12,9 @@ event    all_gather of K-slot compacted active-id lists (comm ∝ activity,
          analogue, on the shared :mod:`repro.core.compaction` primitives
 blocked  sharded Pallas tile store: event exchange across the cut,
          tile-granular skip inside each partition (per-partition blk_id
-         remap into the global spike-block space)
+         remap into the global spike-block space); with
+         ``sim.engine="blocked_fused"`` the local kernel also integrates
+         (fused delivery->LIF, currents never leave VMEM)
 ======== ==================================================================
 
 See ``docs/distributed.md`` for the comparison and

@@ -76,6 +76,19 @@ class ExchangeScheme(Protocol):
         """Zero-initialized per-run stats counters ({} for most schemes)."""
         return {}
 
+    # Optional fused-integration capability (see repro.core.step): a scheme
+    # that can run delivery and the LIF update in one kernel implements
+    #
+    #     def fuses_lif(self, sim) -> bool: ...
+    #     def deliver_fused(self, state, payload, delayed, lif, drive,
+    #                       sim, cap, topo) -> (new_lif, spikes [U] bool,
+    #                                           dropped i32, stats dict)
+    #
+    # When ``fuses_lif(sim)`` is True the step body calls ``deliver_fused``
+    # INSTEAD OF ``deliver`` + its own LIF update — the flag guarantees
+    # integration happens exactly once.  Schemes without the hook are
+    # unfused (the default; the step body owns the LIF update).
+
 
 _REGISTRY: dict[str, ExchangeScheme] = {}
 

@@ -21,6 +21,14 @@ exact (dense tiles, no synapse budget); the only drops are spikes beyond
 the event capacity, counted in exact synapse units like the event scheme.
 Per-step gating effectiveness is observable: the scheme accumulates
 ``tiles_live`` / ``tiles_skipped`` counters into ``DistResult.stats``.
+
+Fused path: with ``sim.engine = "blocked_fused"`` the scheme reports the
+``fuses_lif`` capability and the per-partition delivery kernel also runs
+the LIF update (float32 or Q19.12 int32) before emitting the local spike
+vector — delivered currents and the tile-skip mask never leave VMEM
+(:func:`repro.kernels.spike_prop.kernel.fused_deliver_lif_pallas`); the
+cross-cut event exchange and the drop accounting are unchanged and the
+result is bit-identical to the unfused blocked scheme.
 """
 
 from __future__ import annotations
@@ -73,13 +81,13 @@ class BlockedExchange:
     def exchange(self, state, delayed, cap, topo: Topology):
         return gather_active_events(delayed, cap, topo)
 
-    def deliver(self, state, payload, delayed, sim, cap, topo: Topology):
-        from repro.kernels.spike_prop.kernel import SRC_BLK, spike_deliver_pallas
-        events, idx = payload
-        U, n_glob = topo.part_size, topo.n_global
-
-        # events -> global spike bitmap, blocked for the kernel (ids are
-        # disjoint across partitions; pad slots land in a scratch lane)
+    @staticmethod
+    def _event_spike_blocks(state, events, n_glob):
+        """Gathered events -> the blocked global spike bitmap: [n_sb,
+        SRC_BLK] blocks plus the kernel operand with its trailing zero pad
+        block (ids are disjoint across partitions; pad slots land in a
+        scratch lane)."""
+        from repro.kernels.spike_prop.kernel import SRC_BLK
         npad = state.n_sb * SRC_BLK
         valid = events < n_glob
         spk = jnp.zeros(npad + 1, jnp.float32).at[
@@ -87,16 +95,53 @@ class BlockedExchange:
         blocks = spk.reshape(state.n_sb, SRC_BLK)
         spk_pad = jnp.concatenate(
             [blocks, jnp.zeros((1, SRC_BLK), jnp.float32)])
-        nspk = jnp.concatenate([blocks.sum(axis=1).astype(jnp.int32),
-                                jnp.zeros((1,), jnp.int32)])
+        return blocks, spk_pad
 
+    @staticmethod
+    def _tile_stats(state, bmask):
+        """Live/skipped stored-tile counters from the [n_sb] block-live
+        mask — observability only; the kernels gate on their own copy of
+        the mask (the unfused one on the nspk operand, the fused one on a
+        reduce that never leaves VMEM)."""
+        bmask_pad = jnp.concatenate([bmask, jnp.zeros((1,), bool)])
+        stored = state.blk_id < state.n_sb
+        live = jnp.sum(jnp.logical_and(stored, bmask_pad[state.blk_id]))
+        skipped = jnp.sum(stored) - live
+        return {"tiles_live": live.astype(jnp.int32),
+                "tiles_skipped": skipped.astype(jnp.int32)}
+
+    def deliver(self, state, payload, delayed, sim, cap, topo: Topology):
+        from repro.kernels.spike_prop.kernel import spike_deliver_pallas
+        events, idx = payload
+        U, n_glob = topo.part_size, topo.n_global
+
+        blocks, spk_pad = self._event_spike_blocks(state, events, n_glob)
+        nspk = spk_pad.sum(axis=1).astype(jnp.int32)
         out = spike_deliver_pallas(state.blk_id, state.weights, spk_pad, nspk,
                                    interpret=state.interpret)
         g = out.reshape(-1)[:U]
 
         drop = capacity_overflow_fanout(delayed, idx, state.src_gfo, U)
-        stored = state.blk_id < state.n_sb
-        live = jnp.sum(jnp.logical_and(stored, nspk[state.blk_id] > 0))
-        skipped = jnp.sum(stored) - live
-        return g, drop, {"tiles_live": live.astype(jnp.int32),
-                         "tiles_skipped": skipped.astype(jnp.int32)}
+        return g, drop, self._tile_stats(state, nspk[:-1] > 0)
+
+    # -- fused-integration capability (engine="blocked_fused"): the same
+    #    event exchange + tile store, but the local delivery kernel also
+    #    integrates — currents and the tile-skip mask stay in VMEM --
+
+    def fuses_lif(self, sim) -> bool:
+        from ..engines import engine_integrates_lif
+        return engine_integrates_lif(sim.engine)
+
+    def deliver_fused(self, state, payload, delayed, lif, drive, sim, cap,
+                      topo: Topology):
+        from repro.kernels.spike_prop.ops import fused_step
+        events, idx = payload
+        U, n_glob = topo.part_size, topo.n_global
+
+        blocks, spk_pad = self._event_spike_blocks(state, events, n_glob)
+        new_lif, spikes = fused_step(
+            state.blk_id, state.weights, spk_pad, lif, drive, U,
+            sim.params, sim.fixed_point, state.interpret)
+        drop = capacity_overflow_fanout(delayed, idx, state.src_gfo, U)
+        return new_lif, spikes, drop, self._tile_stats(
+            state, jnp.any(blocks != 0, axis=1))

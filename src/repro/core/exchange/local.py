@@ -32,3 +32,16 @@ class LocalExchange:
         from ..engines import get_engine
         g, drop = get_engine(sim.engine).deliver(state, payload, sim)
         return g, drop, {}
+
+    # -- fused-integration capability: delegated to the engine registry --
+
+    def fuses_lif(self, sim) -> bool:
+        from ..engines import engine_integrates_lif
+        return engine_integrates_lif(sim.engine)
+
+    def deliver_fused(self, state, payload, delayed, lif, drive, sim, cap,
+                      topo: Topology):
+        from ..engines import get_engine
+        new_lif, spikes, drop = get_engine(sim.engine).deliver_fused(
+            state, payload, lif, drive, sim)
+        return new_lif, spikes, drop, {}

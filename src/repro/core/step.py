@@ -10,6 +10,15 @@ collectives) and ``simulate_distributed()`` (any multi-partition scheme
 under vmap emulation or shard_map).  What varies is *only* the registered
 :class:`repro.core.exchange.ExchangeScheme` and the
 :class:`~repro.core.exchange.base.Topology` it runs over.
+
+One structural exception, negotiated through a capability flag rather
+than a second step body: a scheme whose delivery already *integrates*
+(the fused delivery->LIF Pallas kernel, ``engine="blocked_fused"``)
+reports ``fuses_lif(sim) == True`` and the step calls its
+``deliver_fused`` instead of ``deliver`` + ``apply_drive`` — delivery
+and integration happen in one kernel and the step body must not
+integrate again.  Everything around that call (ring buffer, stimulus,
+pad masking, counters, probes) is still the one shared body.
 """
 
 from __future__ import annotations
@@ -21,6 +30,14 @@ import jax.numpy as jnp
 
 from .exchange.base import ExchangeScheme, Topology
 from .neuron import LIFState
+
+
+def _scheme_fuses_lif(scheme: ExchangeScheme, sim) -> bool:
+    """Trace-time capability check: does this (scheme, config) pair fuse
+    the LIF update into delivery?  Schemes without the hook are unfused —
+    the step body then owns the one and only LIF update."""
+    fuses = getattr(scheme, "fuses_lif", None)
+    return bool(fuses(sim)) if fuses is not None else False
 
 
 class SimCarry(NamedTuple):
@@ -52,11 +69,17 @@ def sim_step(carry: SimCarry, t, *, scheme: ExchangeScheme, state, stim,
     delayed = carry.ring[carry.ptr]
 
     payload = scheme.exchange(state, delayed, cap, topo)
-    g_units, drop, stats = scheme.deliver(state, payload, delayed, sim, cap,
-                                          topo)
-
     sstate, drive = stim.step(carry.stim, keys[1:], t, topo.part_size, p)
-    lif, spikes = apply_drive(carry.lif, g_units, drive, p, sim.fixed_point)
+    if _scheme_fuses_lif(scheme, sim):
+        # fused fast path: the engine already integrated (delivery + LIF
+        # in one kernel) — running apply_drive here would double-integrate
+        lif, spikes, drop, stats = scheme.deliver_fused(
+            state, payload, delayed, carry.lif, drive, sim, cap, topo)
+    else:
+        g_units, drop, stats = scheme.deliver(state, payload, delayed, sim,
+                                              cap, topo)
+        lif, spikes = apply_drive(carry.lif, g_units, drive, p,
+                                  sim.fixed_point)
     if pad_mask is not None:
         spikes = jnp.logical_and(spikes, pad_mask)
 

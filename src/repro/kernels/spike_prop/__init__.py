@@ -1,5 +1,6 @@
-from .ops import BlockedSynapses, build_blocked, spike_deliver
+from .ops import (BlockedSynapses, build_blocked, fused_step, spike_blocks,
+                  spike_deliver)
 from .ref import spike_deliver_ref, spike_deliver_dense_ref
 
-__all__ = ["BlockedSynapses", "build_blocked", "spike_deliver",
-           "spike_deliver_ref", "spike_deliver_dense_ref"]
+__all__ = ["BlockedSynapses", "build_blocked", "fused_step", "spike_blocks",
+           "spike_deliver", "spike_deliver_ref", "spike_deliver_dense_ref"]

@@ -23,6 +23,21 @@ proportional to spiking activity rather than synapse count".
 BlockSpec geometry: weight tiles [1, TGT_BLK, SRC_BLK] stream through VMEM
 indexed by (tb, e); the spike vector is blocked [SRC_BLK] by the tile's
 source-block id via a scalar-prefetch index map.
+
+The fused variant (:func:`fused_deliver_lif_pallas`) goes one step
+further and closes the paper's whole per-timestep loop inside VMEM:
+after the last live tile of a target-row block has been accumulated, the
+same kernel invocation applies the :mod:`repro.kernels.lif` neuron body
+(int32 Q19.12 Loihi-faithful path or float32) to that block and emits
+the spike vector directly.  The delivered current lives only in a VMEM
+scratch accumulator — it never round-trips through HBM between delivery
+and integration, which is exactly the locality the paper credits for
+Loihi 2's speed (spike delivery and neuron update share one local
+memory).  The tile-skip decision is fused too: the per-block any-spike
+mask (``repro.core.compaction.two_level_active``'s first level) is
+re-derived from the VMEM-resident spike block instead of arriving as a
+precomputed count array, so neither the delivered currents nor the block
+mask ever leave VMEM.
 """
 
 from __future__ import annotations
@@ -33,6 +48,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.neuron import LIFState, lif_step, lif_step_fx
 
 TGT_BLK = 128
 SRC_BLK = 128
@@ -100,3 +117,138 @@ def spike_deliver_pallas(blk_id, weights, spk_blocks, nspk_blocks,
         **kwargs,
     )
     return kernel(blk_id, spk_blocks, weights, nspk_blocks)
+
+
+# --------------------------------------------------------------------------
+# Fused delivery -> LIF: the whole timestep of a target-row block in VMEM
+# --------------------------------------------------------------------------
+
+def _accumulate_tile(spk_ref, w_ref, acc_ref):
+    """Shared delivery preamble of the fused bodies: zero the VMEM
+    accumulator on the first tile slot, then add the gated tile matvec.
+
+    The live check re-derives the per-block any-spike mask (the first
+    level of ``repro.core.compaction.two_level_active``) from the
+    VMEM-resident spike block — equivalent to the unfused kernel's
+    ``nspk > 0`` gate (spike lanes are exactly 0/1) but the mask is never
+    materialized outside the kernel.
+    """
+    e = pl.program_id(1)
+
+    @pl.when(e == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    s = spk_ref[...]                      # [1, SRC_BLK] f32 spike block
+    live = jnp.any(s != 0.0)
+
+    @pl.when(live)
+    def _tile():
+        w = w_ref[0, 0]                   # [TGT_BLK, SRC_BLK] f32
+        acc_ref[...] += jax.lax.dot_general(
+            w, s, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32).T
+
+
+def _fused_body(blk_id_ref, spk_ref, w_ref, v_ref, g_ref, ref_ref, *rest,
+                params, fixed_point, use_gstim, use_vin, use_force):
+    """grid = (n_tgt_blocks, E): accumulate, then integrate on the last
+    slot.  The integration is not a re-implementation: it CALLS the very
+    ``lif_step`` / ``lif_step_fx`` the unfused step body runs (pure jnp on
+    the VMEM-resident block values), so bit-identity to the unfused
+    composition is structural, not hand-synchronized.  Stimulus channels
+    the caller's drive lacks are absent from the operand list entirely
+    (``use_*`` flags), exactly mirroring ``apply_drive``'s ``None``
+    short-circuits — and sparing their HBM->VMEM streams."""
+    it = iter(rest[:use_gstim + use_vin + use_force])
+    gstim_ref = next(it) if use_gstim else None
+    vin_ref = next(it) if use_vin else None
+    force_ref = next(it) if use_force else None
+    v_out, g_out, refr_out, spk_out, acc_ref = \
+        rest[use_gstim + use_vin + use_force:]
+
+    _accumulate_tile(spk_ref, w_ref, acc_ref)
+    e = pl.program_id(1)
+
+    @pl.when(e == pl.num_programs(1) - 1)
+    def _integrate():
+        g_units = acc_ref[...]
+        if use_gstim:
+            g_units = g_units + gstim_ref[...]
+        lif = LIFState(v=v_ref[...], g=g_ref[...], refrac=ref_ref[...])
+        vin = vin_ref[...] if use_vin else None
+        force = (force_ref[...] != 0) if use_force else None
+        if fixed_point:
+            # f32 accumulation -> integer weight units at the block
+            # boundary, exactly apply_drive's conversion point
+            st, spikes = lif_step_fx(
+                lif, jnp.round(g_units).astype(jnp.int32), params, vin,
+                force)
+        else:
+            st, spikes = lif_step(lif, g_units * params.w_scale, params,
+                                  vin, force)
+        v_out[...] = st.v
+        g_out[...] = st.g
+        refr_out[...] = st.refrac
+        spk_out[...] = spikes.astype(jnp.int32)
+
+
+def fused_deliver_lif_pallas(blk_id, weights, spk_blocks, v, g, refrac,
+                             gstim=None, vin=None, force=None, *, params,
+                             fixed_point: bool, interpret: bool = True):
+    """One call = one whole timestep: spike->gather->accumulate->integrate->
+    threshold per 128-neuron target-row block, entirely in VMEM.
+
+    Args:
+      blk_id / weights / spk_blocks: as :func:`spike_deliver_pallas` (no
+        spike-count array — the block-live mask is derived in-kernel).
+      v, g, refrac: LIF state as [n_tb, TGT_BLK] row blocks (f32 or
+        Q19.12 int32 per ``fixed_point``; refrac always int32).
+      gstim: optional [n_tb, TGT_BLK] f32 stimulus drive in weight units.
+      vin:   optional [n_tb, TGT_BLK] membrane drive — mV f32 (float
+        path) or pre-rounded w_scale units int32 (fixed-point path).
+      force: optional [n_tb, TGT_BLK] int32 forced-spike mask.
+      ``None`` channels are dropped from the operand list entirely (no
+      zero arrays streamed), mirroring the unfused path's ``None``
+      short-circuits.
+    Returns: (v, g, refrac, spikes) row blocks; spikes int32 0/1.
+    """
+    n_tb, E = blk_id.shape
+    grid = (n_tb, E)
+    sdt = jnp.int32 if fixed_point else jnp.float32
+    body = functools.partial(
+        _fused_body, params=params, fixed_point=fixed_point,
+        use_gstim=gstim is not None, use_vin=vin is not None,
+        use_force=force is not None)
+    kwargs = {}
+    params_cls = getattr(pltpu, "TPUCompilerParams", None) or \
+        getattr(pltpu, "CompilerParams", None)
+    if not interpret and params_cls is not None:
+        kwargs["compiler_params"] = params_cls(
+            dimension_semantics=("parallel", "arbitrary"))
+    row = pl.BlockSpec((1, TGT_BLK), lambda tb, e, blk: (tb, 0))
+    stim_ops = [x for x in (gstim, vin, force) if x is not None]
+    kernel = pl.pallas_call(
+        body,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, SRC_BLK), lambda tb, e, blk: (blk[tb, e], 0)),
+                pl.BlockSpec((1, 1, TGT_BLK, SRC_BLK),
+                             lambda tb, e, blk: (tb, e, 0, 0)),
+            ] + [row] * (3 + len(stim_ops)),
+            out_specs=[row, row, row, row],
+            # the delivered current's only home: a VMEM scratch accumulator
+            scratch_shapes=[pltpu.VMEM((1, TGT_BLK), jnp.float32)],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((n_tb, TGT_BLK), sdt),
+            jax.ShapeDtypeStruct((n_tb, TGT_BLK), sdt),
+            jax.ShapeDtypeStruct((n_tb, TGT_BLK), jnp.int32),
+            jax.ShapeDtypeStruct((n_tb, TGT_BLK), jnp.int32),
+        ],
+        interpret=interpret,
+        **kwargs,
+    )
+    return kernel(blk_id, spk_blocks, weights, v, g, refrac, *stim_ops)

@@ -135,16 +135,66 @@ def build_blocked_sharded(d) -> ShardedBlockedSynapses:
                                   n_sb=n_sb, occupancy=float(occ))
 
 
+def spike_blocks(spikes, n: int, n_sb: int):
+    """[n] bool/float spikes -> [n_sb+1, SRC_BLK] f32 blocks with a trailing
+    zero pad block — no per-block counts (the fused kernel derives its
+    block-live mask in VMEM)."""
+    spk = jnp.asarray(spikes, jnp.float32)
+    blocks = jnp.pad(spk, (0, n_sb * SRC_BLK - n)).reshape(n_sb, SRC_BLK)
+    return jnp.concatenate([blocks, jnp.zeros((1, SRC_BLK), jnp.float32)])
+
+
 def pad_spike_blocks(spikes, n: int, n_sb: int):
     """[n] bool/float spikes -> ([n_sb+1, SRC_BLK] f32 blocks with a trailing
     zero pad block, [n_sb+1] i32 per-block spike counts).  Traced per step;
     this is the only per-step host->kernel data movement."""
-    spk = jnp.asarray(spikes, jnp.float32)
-    blocks = jnp.pad(spk, (0, n_sb * SRC_BLK - n)).reshape(n_sb, SRC_BLK)
-    spk_pad = jnp.concatenate([blocks, jnp.zeros((1, SRC_BLK), jnp.float32)])
-    nspk = jnp.concatenate([blocks.sum(axis=1).astype(jnp.int32),
-                            jnp.zeros((1,), jnp.int32)])
+    spk_pad = spike_blocks(spikes, n, n_sb)
+    nspk = spk_pad.sum(axis=1).astype(jnp.int32)
     return spk_pad, nspk
+
+
+def fused_step(blk_id, weights, spk_pad, lif, drive, n: int, params,
+               fixed_point: bool, interpret: bool):
+    """Run the fused delivery->LIF kernel on an [n]-neuron LIF state.
+
+    Shared by the monolithic ``blocked_fused`` engine and the sharded
+    ``blocked`` exchange scheme's fused path: pads the LIF state and the
+    stimulus drive channels to [n_tb, TGT_BLK] row blocks (the kernel's
+    target geometry, matching the unfused ``out.reshape(-1)[:n]`` layout),
+    invokes :func:`fused_deliver_lif_pallas`, and unpads.  ``drive`` is a
+    :class:`repro.exp.stimulus.StimDrive`; ``None`` channels stay ``None``
+    (absent from the kernel's operand list — no zero arrays streamed), and
+    the fixed-point ``v_mv`` -> w_scale-units conversion happens here,
+    exactly where ``repro.exp.stimulus.apply_drive`` does it on the
+    unfused path.
+
+    Returns ``(LIFState, spikes [n] bool)``.
+    """
+    from repro.core.neuron import LIFState
+    from .kernel import fused_deliver_lif_pallas
+    n_tb = blk_id.shape[0]
+    rows = n_tb * TGT_BLK
+    sdt = jnp.int32 if fixed_point else jnp.float32
+
+    def rowblk(x, dtype):
+        x = jnp.asarray(x).astype(dtype)
+        return jnp.pad(x, (0, rows - n)).reshape(n_tb, TGT_BLK)
+
+    gstim = None if drive.g_units is None else rowblk(drive.g_units,
+                                                      jnp.float32)
+    vin = None
+    if drive.v_mv is not None:
+        vin = rowblk(jnp.round(drive.v_mv / params.w_scale), jnp.int32) \
+            if fixed_point else rowblk(drive.v_mv, jnp.float32)
+    force = None if drive.force is None else rowblk(drive.force, jnp.int32)
+
+    v, g, refrac, spk = fused_deliver_lif_pallas(
+        blk_id, weights, spk_pad, rowblk(lif.v, sdt), rowblk(lif.g, sdt),
+        rowblk(lif.refrac, jnp.int32), gstim, vin, force, params=params,
+        fixed_point=fixed_point, interpret=interpret)
+    unblk = lambda x: x.reshape(-1)[:n]
+    return (LIFState(v=unblk(v), g=unblk(g), refrac=unblk(refrac)),
+            unblk(spk).astype(bool))
 
 
 @functools.partial(jax.jit, static_argnames=("n", "n_sb", "interpret"))

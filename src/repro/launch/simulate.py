@@ -44,6 +44,10 @@ def main():
     ap.add_argument("--scenario", default="sugar_feeding",
                     choices=available_scenarios())
     ap.add_argument("--dt", type=float, default=0.1, choices=[0.1, 1.0])
+    ap.add_argument("--fixed-point", action="store_true",
+                    help="run the int32 Q19.12 integration path (the "
+                         "Loihi-faithful arithmetic; CI smokes it on "
+                         "every push)")
     ap.add_argument("--trials", type=int, default=1)
     ap.add_argument("--t-ms", type=float, default=0.0)
     ap.add_argument("--background-hz", type=float, default=None,
@@ -66,7 +70,9 @@ def main():
                                  target_synapses=fw.target_synapses)
     print(f"[simulate] connectome: {c.stats()}")
     t_ms = args.t_ms or fw.t_sim_ms
-    cfg = dataclasses.replace(fw.sim, engine=args.engine)
+    cfg = dataclasses.replace(fw.sim, engine=args.engine,
+                              fixed_point=fw.sim.fixed_point
+                              or args.fixed_point)
     t_steps = int(round(t_ms / cfg.params.dt))
     dt_ms = cfg.params.dt
 

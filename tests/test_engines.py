@@ -16,7 +16,8 @@ def net():
     return c, sugar
 
 
-ENGINES = ["dense", "csr", "ell", "event", "binned", "blocked"]
+ENGINES = ["dense", "csr", "ell", "event", "binned", "blocked",
+           "blocked_fused"]
 
 
 def test_registry_lists_all_builtin_engines():

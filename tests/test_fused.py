@@ -1,0 +1,224 @@
+"""Fused delivery->LIF kernel: bit-identity to the unfused composition and
+the integrates-once capability contract.
+
+The ``blocked_fused`` engine (and the fused path of the sharded ``blocked``
+exchange scheme) runs spike delivery and the LIF update in one Pallas
+kernel, with the delivered current living only in a VMEM accumulator.  That
+is a *scheduling* change, not an arithmetic one: every test here pins
+bit-identity against the unfused blocked + ``lif_step``/``lif_step_fx``
+composition, in float32 and the Loihi-faithful int32 Q19.12 path
+(interpret mode on CPU; the same kernels compile on TPU).
+
+The capability flag (``integrates_lif`` / ``fuses_lif``) is what keeps the
+shared step body from integrating twice — its contract gets its own tests.
+"""
+
+import numpy as np
+import pytest
+from conftest import HAVE_HYPOTHESIS, given, requires_hypothesis, settings, st
+
+from repro.core import (SimConfig, available_engines, get_engine, simulate,
+                        synthetic_flywire)
+from repro.core.engines import engine_integrates_lif
+from repro.core.exchange import available_schemes, get_scheme
+
+T_STEPS = 200
+
+
+@pytest.fixture(scope="module")
+def net():
+    c = synthetic_flywire(n=1000, target_synapses=25_000, seed=5)
+    return c, np.arange(20)
+
+
+def _cfg(engine, fx, **kw):
+    # poisson_to_v=False on the fixed-point path mirrors the Loihi ablation
+    # and keeps both drive channels (g_units + force) exercised
+    kw.setdefault("background_rate_hz", 2.0)
+    return SimConfig(engine=engine, quantize_bits=9, fixed_point=fx,
+                     poisson_to_v=not fx, **kw)
+
+
+def _assert_bit_identical(a, b):
+    np.testing.assert_array_equal(np.asarray(a.counts), np.asarray(b.counts))
+    for la, lb, name in zip(a.state, b.state, ("v", "g", "refrac")):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb),
+                                      err_msg=name)
+    assert int(a.dropped) == int(b.dropped)
+
+
+# ------------------------------------------------------------------------
+# Monolithic engine: blocked_fused vs blocked + the step body's LIF update
+# ------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fx", [False, True], ids=["f32", "q19.12"])
+def test_fused_engine_bit_identical_to_unfused(net, fx):
+    c, sugar = net
+    ref = simulate(c, _cfg("blocked", fx), T_STEPS, sugar, seed=7)
+    out = simulate(c, _cfg("blocked_fused", fx), T_STEPS, sugar, seed=7)
+    assert int(out.counts.sum()) > 0
+    _assert_bit_identical(ref, out)
+
+
+def test_fused_engine_matches_csr_reference(net):
+    """Transitivity anchor: fused == blocked == csr on the same stream."""
+    c, sugar = net
+    ref = simulate(c, _cfg("csr", False), T_STEPS, sugar, seed=3)
+    out = simulate(c, _cfg("blocked_fused", False), T_STEPS, sugar, seed=3)
+    np.testing.assert_array_equal(np.asarray(ref.counts),
+                                  np.asarray(out.counts))
+
+
+# ------------------------------------------------------------------------
+# Distributed: fused path under the sharded blocked exchange scheme (P=4)
+# ------------------------------------------------------------------------
+
+def _dist(c, engine, fx, t_steps, caps=None, seed=11, background_hz=2.0):
+    from repro.core.dcsr import build_dcsr
+    from repro.core.distributed import DistConfig, simulate_distributed
+    from repro.core.partition import even_partition
+    d = build_dcsr(c, even_partition(c, 4), quantize_bits=9)
+    sim = _cfg(engine, fx, background_rate_hz=background_hz)
+    dcfg = DistConfig(sim=sim, scheme="blocked",
+                      **(caps or {}))
+    return simulate_distributed(d, dcfg, t_steps, np.arange(20), seed=seed,
+                                emulate=True)
+
+
+@pytest.mark.parametrize("fx", [False, True], ids=["f32", "q19.12"])
+def test_fused_blocked_scheme_bit_identical_P4(net, fx):
+    """sim.engine='blocked_fused' flips the blocked scheme onto its fused
+    kernel; exchange, RNG stream, drop accounting and tile counters must
+    be unchanged — and the result bit-identical to the unfused scheme."""
+    c, _ = net
+    ref = _dist(c, "csr", fx, 120)           # scheme-local delivery unfused
+    out = _dist(c, "blocked_fused", fx, 120)
+    assert int(out.counts.sum()) > 0
+    np.testing.assert_array_equal(ref.counts, out.counts)
+    for la, lb, name in zip(ref.state, out.state, ("v", "g", "refrac")):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb),
+                                      err_msg=name)
+    assert ref.dropped == out.dropped
+    for k in ("tiles_live", "tiles_skipped"):
+        assert int(ref.stats[k]) == int(out.stats[k])
+
+
+def test_fused_blocked_scheme_overflow_drops_match(net):
+    """Under a starved event capacity the fused path must count exactly the
+    same capacity-overflow drops (synapse units) as the unfused scheme —
+    fusion changes where integration happens, never what is lost."""
+    c, _ = net
+    caps = dict(spike_capacity=2, block_capacity=1)
+    ref = _dist(c, "csr", False, 120, caps=caps, background_hz=200.0)
+    out = _dist(c, "blocked_fused", False, 120, caps=caps,
+                background_hz=200.0)
+    assert out.dropped > 0                    # deliberately starved
+    assert ref.dropped == out.dropped
+    np.testing.assert_array_equal(ref.counts, out.counts)
+
+
+# ------------------------------------------------------------------------
+# Capability flag: integration happens exactly once
+# ------------------------------------------------------------------------
+
+def test_capability_flag_consistency():
+    """Registry invariant: an engine/scheme advertises ``integrates_lif`` /
+    ``fuses_lif`` iff it actually provides the fused entry point — a flag
+    without an implementation (or vice versa) could silently double- or
+    zero-integrate."""
+    for name in available_engines():
+        eng = get_engine(name)
+        assert engine_integrates_lif(name) == hasattr(eng, "deliver_fused"), \
+            name
+    assert engine_integrates_lif("blocked_fused")
+    assert not engine_integrates_lif("blocked")
+    for name in available_schemes():
+        scheme = get_scheme(name)
+        assert hasattr(scheme, "fuses_lif") == \
+            hasattr(scheme, "deliver_fused"), name
+
+
+def test_fused_step_skips_apply_drive(net, monkeypatch):
+    """The step body must not run its own LIF update when the engine
+    already integrated (double integration), and must run it exactly once
+    per traced step otherwise."""
+    import repro.exp.stimulus as stim_mod
+    c, sugar = net
+    calls = {"n": 0}
+    real = stim_mod.apply_drive
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return real(*a, **kw)
+
+    monkeypatch.setattr(stim_mod, "apply_drive", counting)
+    # unique t_steps so each run traces freshly under the patched function
+    simulate(c, _cfg("blocked_fused", False), 7, sugar, seed=0)
+    assert calls["n"] == 0, "fused engine must bypass the step-body LIF"
+    simulate(c, _cfg("blocked", False), 9, sugar, seed=0)
+    assert calls["n"] == 1, "unfused engine must integrate exactly once"
+
+
+@requires_hypothesis
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), fx=st.booleans(),
+       rate=st.floats(0.0, 0.3))
+def test_deliver_fused_equals_deliver_then_integrate(seed, fx, rate):
+    """Property: for ANY spike pattern, LIF state and drive, the fused
+    kernel's one-call result equals the unfused deliver + apply_drive
+    composition bit-for-bit (both jitted — the contract is between the two
+    compiled programs the step body can choose between)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.neuron import LIFState
+    from repro.exp.stimulus import StimDrive, apply_drive
+
+    c = _PROP_NET
+    cfg = SimConfig(engine="blocked_fused", quantize_bits=9, fixed_point=fx)
+    syn = _prop_syn(cfg)
+    eng = get_engine("blocked_fused")
+    rng = np.random.default_rng(seed)
+    n = c.n
+    spikes = jnp.asarray(rng.random(n) < rate)
+    if fx:
+        lif = LIFState(v=jnp.asarray(rng.integers(-30000, 40000, n), jnp.int32),
+                       g=jnp.asarray(rng.integers(0, 9000, n), jnp.int32),
+                       refrac=jnp.asarray(rng.integers(0, 3, n), jnp.int32))
+    else:
+        lif = LIFState(v=jnp.asarray(rng.normal(0, 3, n), jnp.float32),
+                       g=jnp.asarray(abs(rng.normal(0, 1, n)), jnp.float32),
+                       refrac=jnp.asarray(rng.integers(0, 3, n), jnp.int32))
+    drive = StimDrive(v_mv=jnp.asarray(rng.normal(0, 2, n), jnp.float32),
+                      g_units=jnp.asarray(rng.normal(0, 5, n), jnp.float32),
+                      force=jnp.asarray(rng.random(n) < 0.02))
+
+    @jax.jit
+    def composed(lif, drive, spikes):
+        g_units, _ = eng.deliver(syn, spikes, cfg)
+        return apply_drive(lif, g_units, drive, cfg.params, fx)
+
+    @jax.jit
+    def fused(lif, drive, spikes):
+        new_lif, spk, _ = eng.deliver_fused(syn, spikes, lif, drive, cfg)
+        return new_lif, spk
+
+    rl, rs = composed(lif, drive, spikes)
+    fl, fs = fused(lif, drive, spikes)
+    for a, b, name in zip(fl, rl, ("v", "g", "refrac")):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=name)
+    np.testing.assert_array_equal(np.asarray(fs), np.asarray(rs))
+
+
+if HAVE_HYPOTHESIS:
+    # module-scope net/state for the property test (hypothesis forbids
+    # function-scoped fixtures; the build is amortized across examples)
+    _PROP_NET = synthetic_flywire(n=600, target_synapses=15_000, seed=8)
+    _PROP_SYN = {}
+
+    def _prop_syn(cfg):
+        key = cfg.fixed_point
+        if key not in _PROP_SYN:
+            _PROP_SYN[key] = get_engine("blocked_fused").build(_PROP_NET, cfg)
+        return _PROP_SYN[key]
