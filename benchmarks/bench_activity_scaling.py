@@ -25,7 +25,12 @@ metric (tiles skipped/step ∝ sparsity).  The fused delivery->LIF rows
 (``engine_step.blocked_fused.*``, interpret mode at small n like every
 blocked-kernel CPU row) pin the one-kernel step composition — float32
 and the Q19.12 int32 path — so a regression in the fused fast path shows
-up in the trajectory, not just in the bit-identity tests.
+up in the trajectory, not just in the bit-identity tests.  The chunked
+supervision rows (``engine_step.event.chunked.{K}`` and the
+``.checkpointed`` variant) price the resilience layer's chunk
+boundaries (docs/resilience.md): same bit-identical run, one compiled
+K-step program reused ceil(T/K) times, with and without an atomic npz
+checkpoint per boundary.
 
 ``smoke=True`` shrinks every scale knob to CI size: a harness-breakage
 canary (imports, retracing, capacity plumbing), not a measurement.
@@ -175,6 +180,49 @@ def run(full: bool = False, smoke: bool = False):
                     f"{ms_by_n[n1]/ms_by_n[n0]:.2f}x",
                     f"event ms/step growth over {n1/n0:.0f}x n at "
                     f"{NSCALE_RATE}hz (sublinear: << n ratio)"))
+
+    # --- chunked supervision overhead (repro.core.health): the same
+    #     event-engine run as ceil(T/K) reuses of one compiled K-step
+    #     program with the carry threaded host-side.  The result is
+    #     bit-identical (pinned in tests/test_health.py); these rows pin
+    #     what the supervision points COST, monolithic scan = baseline ---
+    chunk_ks = (8, 4) if smoke else (64, 16)
+    caps = auto_capacity(c, DIST_RATE)
+    cfgc = SimConfig(engine="event", poisson_rate_hz=0.0,
+                     **caps.as_config_kwargs())
+    stimc = build_scenario("activity_sweep", c, cfgc,
+                           background_hz=DIST_RATE)
+    sync = build_synapses(c, cfgc)
+
+    def run_chunked_sim(K, ckpt_dir=None):
+        res = simulate(c, cfgc, t_steps, seed=0, syn=sync, stimulus=stimc,
+                       chunk_steps=K, checkpoint_dir=ckpt_dir)
+        jax.block_until_ready(res.counts)
+        return res
+
+    _run_sim(c, cfgc, sync, stimc, t_steps)
+    t_mono = timeit(lambda: _run_sim(c, cfgc, sync, stimc, t_steps), iters=2)
+    for K in chunk_ks:
+        run_chunked_sim(K)
+        t_c = timeit(lambda: run_chunked_sim(K), iters=2)
+        over = (t_c - t_mono) / t_mono * 100
+        rows.append(row(f"engine_step.event.chunked.{K}",
+                        f"{t_steps/t_c:.1f}",
+                        f"steps/sec ({t_c/t_steps*1e3:.3f} ms/step, n={c.n}, "
+                        f"K={K}, rate={DIST_RATE}hz; {over:+.1f}% vs "
+                        f"monolithic {t_steps/t_mono:.1f} steps/sec — "
+                        f"bit-identical chunked scan)"))
+    import tempfile
+    with tempfile.TemporaryDirectory() as _ckdir:
+        K = chunk_ks[0]
+        run_chunked_sim(K, _ckdir)
+        t_ck = timeit(lambda: run_chunked_sim(K, _ckdir), iters=2)
+        over = (t_ck - t_mono) / t_mono * 100
+        rows.append(row(f"engine_step.event.chunked.{K}.checkpointed",
+                        f"{t_steps/t_ck:.1f}",
+                        f"steps/sec ({t_ck/t_steps*1e3:.3f} ms/step, n={c.n}, "
+                        f"K={K}; atomic npz checkpoint at every chunk "
+                        f"boundary, {over:+.1f}% vs monolithic)"))
 
     # --- fused delivery->LIF (blocked_fused): one kernel per step runs
     #     spike->gather->accumulate->integrate->threshold per 128-row

@@ -18,13 +18,16 @@ from .partition import (PartitionCaps, Partitioning, caps_from_budget,
                         even_partition, greedy_partition, partition_report)
 from .compaction import (active_fanout_total, derived_block_capacity,
                          ragged_slots, slot_owner, two_level_active)
-from .capacity import CapacityConfig
+from .capacity import CapacityConfig, escalate_capacity
 from .engine import (SimCarry, SimConfig, SimResult, build_synapses,
                      simulate, spike_rates_hz)
 from .engines import (Capacity, DeliveryEngine, auto_capacity,
                       available_engines, get_engine, register)
-from .exchange import (ExchangeScheme, available_schemes, get_scheme,
+from .exchange import (ExchangeFault, ExchangeScheme, FaultSpec,
+                       available_schemes, configure_faulty, get_scheme,
                        register_scheme)
+from .health import (HealthConfig, SimCheckpointer, SimulationHealthError,
+                     run_chunked, run_resilient)
 from .validate import (ParityStats, mean_rates_over_trials, parity,
                        raster_to_times)
 

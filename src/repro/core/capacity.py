@@ -13,6 +13,7 @@ per-field knobs survive as deprecated constructor shims on both configs
 from __future__ import annotations
 
 import dataclasses
+import math
 import warnings
 
 
@@ -77,5 +78,24 @@ def merge_legacy_capacity(capacity: CapacityConfig | None,
     return cap
 
 
+def escalate_capacity(cap: CapacityConfig | None,
+                      factor: float = 2.0) -> CapacityConfig | None:
+    """Re-derive a larger :class:`CapacityConfig` after a drop-rate health
+    breach (:mod:`repro.core.health`): every budget is scaled by
+    ``factor``, so repeated escalations converge geometrically to a
+    lossless provisioning while drops stay exactly counted along the way.
+    ``None`` passes through (no base capacity to escalate — the
+    supervisor then surfaces the breach instead of looping)."""
+    if cap is None:
+        return None
+    if factor <= 1.0:
+        raise ValueError(f"escalation factor must exceed 1, got {factor}")
+    up = lambda x: int(math.ceil(x * factor))  # noqa: E731
+    return CapacityConfig(
+        spike_capacity=up(cap.spike_capacity),
+        syn_budget=up(cap.syn_budget),
+        block_capacity=up(cap.block_capacity) if cap.block_capacity else 0)
+
+
 __all__ = ["CapacityConfig", "DISTRIBUTED_CAPACITY", "MONOLITHIC_CAPACITY",
-           "merge_legacy_capacity"]
+           "escalate_capacity", "merge_legacy_capacity"]

@@ -46,6 +46,7 @@ from .dcsr import DCSR
 from .engine import SimConfig
 from .exchange import (DistArrays, Topology, available_schemes,
                        build_dist_arrays, get_scheme)
+from .health import SimCheckpointer, health_stats_init, run_chunked
 from .neuron import LIFState, init_state
 from .step import SimCarry, scan_steps
 
@@ -150,7 +151,9 @@ def _init_dist_carry(d: DCSR, cfg: DistConfig, stim, scheme,
     lif0 = jax.tree.map(
         lambda x: bcast(x.reshape((P_,) + (1,) * len(batch) + (U,))
                         if batch else x.reshape(P_, U), (U,)), lif0)
-    stats0 = {k: bcast(v, ()) for k, v in scheme.init_stats().items()}
+    stats0 = {k: bcast(v, ())
+              for k, v in {**scheme.init_stats(),
+                           **health_stats_init(sc)}.items()}
     return SimCarry(
         lif=lif0,
         ring=jnp.zeros(shp + (sc.params.delay_steps, U), dtype=bool),
@@ -166,11 +169,13 @@ def _init_dist_carry(d: DCSR, cfg: DistConfig, stim, scheme,
 def _partition_run(scheme, cfg: DistConfig, probes, t_steps: int,
                    topo: Topology, trials: bool):
     """The per-partition run: the unified scan, optionally vmapped over a
-    leading trial axis of the carry (state/stimulus broadcast)."""
-    def run_one(carry, state, stim, pad, vrows):
+    leading trial axis of the carry (state/stimulus broadcast).  ``t0``
+    is the *traced* step offset (chunked supervision reuses one compiled
+    K-step program per chunk — see :mod:`repro.core.health`)."""
+    def run_one(carry, state, stim, pad, vrows, t0):
         def go(cy):
             return scan_steps(scheme, state, cy, stim, cfg.sim, cfg.capacity,
-                              topo, probes, t_steps, pad_mask=pad,
+                              topo, probes, t_steps, t0=t0, pad_mask=pad,
                               voltage_rows=vrows)
         return jax.vmap(go)(carry) if trials else go(carry)
     return run_one
@@ -179,14 +184,15 @@ def _partition_run(scheme, cfg: DistConfig, probes, t_steps: int,
 @functools.partial(jax.jit, static_argnums=(0, 6, 7, 8, 9),
                    donate_argnums=(1,))
 def _run_emulated(scheme_name: str, carry, state, stim, pad, vrows,
-                  cfg: DistConfig, probes, t_steps: int, trials: bool):
+                  cfg: DistConfig, probes, t_steps: int, trials: bool,
+                  t0=None):
     """vmap over the partition dim with a named axis -> collectives work
     on one device (semantics-identical to the shard_map execution)."""
     P_, U = pad.shape
     run_one = _partition_run(get_scheme(scheme_name), cfg, probes, t_steps,
                              Topology(P_, U, axis=AXIS), trials)
-    return jax.vmap(run_one, in_axes=(0, 0, 0, 0, 0), axis_name=AXIS)(
-        carry, state, stim, pad, vrows)
+    return jax.vmap(run_one, in_axes=(0, 0, 0, 0, 0, None),
+                    axis_name=AXIS)(carry, state, stim, pad, vrows, t0)
 
 
 @functools.lru_cache(maxsize=64)
@@ -198,28 +204,34 @@ def _shard_map_fn(scheme_name: str, cfg: DistConfig, probes, t_steps: int,
     run_one = _partition_run(get_scheme(scheme_name), cfg, probes, t_steps,
                              Topology(P_, U, axis=AXIS), trials)
 
-    def sharded(carry, state, stim, pad, vrows):
+    def sharded(carry, state, stim, pad, vrows, t0):
         strip = lambda t: jax.tree.map(lambda x: x[0], t)   # local P dim
         out = run_one(strip(carry), strip(state), strip(stim), pad[0],
-                      vrows[0])
+                      vrows[0], t0)
         return jax.tree.map(lambda x: x[None], out)
 
-    return jax.jit(shard_map(sharded, mesh=mesh, in_specs=P(AXIS),
-                             out_specs=P(AXIS), check_rep=False))
+    return jax.jit(shard_map(
+        sharded, mesh=mesh,
+        in_specs=(P(AXIS), P(AXIS), P(AXIS), P(AXIS), P(AXIS), P()),
+        out_specs=P(AXIS), check_rep=False))
 
 
 def _run_shard_map(scheme_name: str, carry, state, stim, pad, vrows,
                    cfg: DistConfig, probes, t_steps: int, trials: bool,
-                   mesh: Mesh):
+                   mesh: Mesh, t0=None):
     P_, U = pad.shape
     fn = _shard_map_fn(scheme_name, cfg, probes, t_steps, trials, mesh,
                        P_, U)
-    return fn(carry, state, stim, pad, vrows)
+    if t0 is None:
+        t0 = jnp.int32(0)   # replicated scalar: the spec needs a leaf
+    return fn(carry, state, stim, pad, vrows, t0)
 
 
 def _run_partitioned(d: DCSR, cfg: DistConfig, t_steps: int, keys,
                      sugar_neurons, stimulus, probes, mesh, emulate: bool,
-                     trials: bool):
+                     trials: bool, chunk_steps: Optional[int] = None,
+                     checkpoint_dir: Optional[str] = None,
+                     resume: bool = False, async_checkpoint: bool = False):
     if cfg.scheme == "local" or cfg.scheme not in available_schemes():
         raise ValueError(
             f"unknown distributed exchange scheme {cfg.scheme!r}; "
@@ -230,16 +242,35 @@ def _run_partitioned(d: DCSR, cfg: DistConfig, t_steps: int, keys,
     probes, vrows, owner = _resolve_dist_probes(d, cfg.sim, probes)
     pad = jnp.asarray(d.inv_perm.reshape(d.n_parts, d.part_size) >= 0)
     carry0 = _init_dist_carry(d, cfg, stim, scheme, keys)
+    if not emulate and mesh is None:
+        mesh = make_core_mesh(d.n_parts)
 
-    if emulate:
-        out, records = _run_emulated(cfg.scheme, carry0, state, stim, pad,
-                                     vrows, cfg, probes, t_steps, trials)
+    def run(carry, k, t0):
+        if emulate:
+            return _run_emulated(cfg.scheme, carry, state, stim, pad, vrows,
+                                 cfg, probes, k, trials, t0)
+        return _run_shard_map(cfg.scheme, carry, state, stim, pad, vrows,
+                              cfg, probes, k, trials, mesh, t0)
+
+    supervised = (chunk_steps is not None or checkpoint_dir is not None
+                  or cfg.sim.health is not None)
+    if not supervised:
+        out, records = run(carry0, t_steps, None)
     else:
-        if mesh is None:
-            mesh = make_core_mesh(d.n_parts)
-        out, records = _run_shard_map(cfg.scheme, carry0, state, stim, pad,
-                                      vrows, cfg, probes, t_steps, trials,
-                                      mesh)
+        if trials:
+            raise ValueError(
+                "chunked supervision (chunk_steps / checkpoint_dir / "
+                "health) is not supported on the trial-batched path; "
+                "supervise seeds as separate simulate_distributed runs")
+        ckpt = (SimCheckpointer(checkpoint_dir, async_save=async_checkpoint)
+                if checkpoint_dir is not None else None)
+        out, records = run_chunked(
+            lambda cy, s, k: run(cy, k, jnp.int32(s)),
+            carry0, t_steps, chunk_steps,
+            time_axis=1,            # records are partition-stacked [P, K, ..]
+            health=cfg.sim.health, n=d.n_orig, dt_ms=cfg.sim.params.dt,
+            checkpointer=ckpt, resume=resume,
+            host_hook=getattr(scheme, "host_supervise", None))
     return out, records, probes, owner
 
 
@@ -311,6 +342,10 @@ def simulate_distributed(
     emulate: bool = False,
     stimulus=None,
     probes=None,
+    chunk_steps: Optional[int] = None,
+    checkpoint_dir: Optional[str] = None,
+    resume: bool = False,
+    async_checkpoint: bool = False,
 ) -> DistResult:
     """Run the partitioned network.  ``emulate=True`` uses vmap with an
     axis name on one device (semantics-identical); otherwise shard_map
@@ -323,11 +358,18 @@ def simulate_distributed(
     :class:`repro.exp.ProbeSpec`, with records returned in original ids
     exactly like :func:`repro.core.simulate`.  For a vmapped seed batch
     use :func:`repro.exp.run_dist_trials`.
+
+    ``chunk_steps`` / ``checkpoint_dir`` / ``resume`` mirror
+    :func:`repro.core.simulate`'s chunked supervision (bit-identical
+    chunking, chunk-boundary health checks against ``cfg.sim.health``,
+    checkpoint/resume) on the partitioned path; see ``docs/resilience.md``.
     """
     keys = jax.random.split(jax.random.PRNGKey(seed), d.n_parts)
     out, records, probes, owner = _run_partitioned(
         d, cfg, t_steps, keys, sugar_neurons, stimulus, probes, mesh,
-        emulate, trials=False)
+        emulate, trials=False, chunk_steps=chunk_steps,
+        checkpoint_dir=checkpoint_dir, resume=resume,
+        async_checkpoint=async_checkpoint)
     counts, dropped, state, recs, stats = _assemble(d, out, records, probes,
                                                     owner)
     return DistResult(counts=counts, dropped=int(dropped), state=state,

@@ -31,6 +31,8 @@ import numpy as np
 from .capacity import MONOLITHIC_CAPACITY, CapacityConfig, merge_legacy_capacity
 from .connectome import Connectome
 from .engines import available_engines, get_engine
+from .health import (HealthConfig, SimCheckpointer, health_stats_init,
+                     run_chunked)
 from .neuron import LIFParams, LIFState, init_state
 from .step import SimCarry, scan_steps
 
@@ -55,6 +57,7 @@ class SimConfig:
     ell_width_cap: int = 4096        # SSD fan-in cap
     collect_raster: bool = False     # deprecated: use ProbeSpec(raster=True)
     capacity: Optional[CapacityConfig] = None   # event-path static budgets
+    health: Optional[HealthConfig] = None   # in-scan sentinels + thresholds
 
     def __post_init__(self):
         cap = merge_legacy_capacity(
@@ -90,10 +93,11 @@ class SimResult(NamedTuple):
     dropped: jax.Array
     raster: jax.Array | None
     records: dict          # ProbeSpec-selected [T, ...] arrays
+    stats: dict = {}       # scheme + health counters (repro.core.health)
 
 
 def _scan_steps(syn, carry: SimCarry, stim, cfg: SimConfig, probes,
-                t_steps: int, n: int):
+                t_steps: int, n: int, t0=None):
     """Scan `t_steps` steps of the ONE step body (:mod:`repro.core.step`)
     through the degenerate P=1 ``local`` exchange scheme; shared by the
     single-run and vmapped-trials entry points.
@@ -101,27 +105,29 @@ def _scan_steps(syn, carry: SimCarry, stim, cfg: SimConfig, probes,
     ``syn`` is the engine state pytree and ``stim`` the stimulus pytree
     (their static fields key the jit cache); all stimulus-specific work —
     Poisson drive, background spiking, clocked currents — flows through
-    ``stim.step``, all observability through ``probes.collect``.
+    ``stim.step``, all observability through ``probes.collect``.  ``t0``
+    is a *traced* step offset: a chunked run reuses one compiled K-step
+    program for every chunk.
     """
     from .exchange import Topology, get_scheme
     return scan_steps(get_scheme("local"), syn, carry, stim, cfg,
                       cfg.capacity, Topology(1, n, axis=None), probes,
-                      t_steps)
+                      t_steps, t0=t0)
 
 
 @functools.partial(jax.jit, static_argnums=(3, 4, 5, 6), donate_argnums=(1,))
 def _run_scan(syn, carry: SimCarry, stim, cfg: SimConfig, probes,
-              t_steps: int, n: int):
-    return _scan_steps(syn, carry, stim, cfg, probes, t_steps, n)
+              t_steps: int, n: int, t0=None):
+    return _scan_steps(syn, carry, stim, cfg, probes, t_steps, n, t0)
 
 
 @functools.partial(jax.jit, static_argnums=(3, 4, 5, 6), donate_argnums=(1,))
 def _run_scan_trials(syn, carry: SimCarry, stim, cfg: SimConfig, probes,
-                     t_steps: int, n: int):
+                     t_steps: int, n: int, t0=None):
     """Batched trials: vmap the scan over a leading seed/trial axis of the
     carry; syn and stim are broadcast (shared across trials)."""
     return jax.vmap(
-        lambda cy: _scan_steps(syn, cy, stim, cfg, probes, t_steps, n)
+        lambda cy: _scan_steps(syn, cy, stim, cfg, probes, t_steps, n, t0)
     )(carry)
 
 
@@ -134,7 +140,7 @@ def _init_carry(n: int, cfg: SimConfig, stimulus, seed: int) -> SimCarry:
         counts=jnp.zeros(n, jnp.int32),
         dropped=jnp.int32(0),
         stim=stimulus.init_state(n),
-        stats={},
+        stats=health_stats_init(cfg),
     )
 
 
@@ -172,6 +178,10 @@ def simulate(
     syn: Any | None = None,
     stimulus: Any | None = None,
     probes: Any | None = None,
+    chunk_steps: Optional[int] = None,
+    checkpoint_dir: Optional[str] = None,
+    resume: bool = False,
+    async_checkpoint: bool = False,
 ) -> SimResult:
     """Run `t_steps` of the network; returns per-neuron spike counts (the
     paper's validation statistic) plus any probe records.
@@ -183,6 +193,15 @@ def simulate(
     + background drive reconstructed from ``cfg`` and ``sugar_neurons``);
     ``probes`` is a :class:`repro.exp.ProbeSpec` (default: raster iff
     ``cfg.collect_raster``).
+
+    ``chunk_steps=K`` runs the same simulation as ceil(T/K) reuses of one
+    compiled K-step program with the carry threaded host-side — the
+    result is bit-identical to the monolithic scan, but the host gets a
+    supervision point every K steps where ``cfg.health`` thresholds are
+    checked and (with ``checkpoint_dir``) the carry is checkpointed, so a
+    killed run restarted with ``resume=True`` reproduces the
+    uninterrupted run bit-for-bit.  See :mod:`repro.core.health` and
+    ``docs/resilience.md``.
     """
     n = c.n
     if syn is None:
@@ -190,10 +209,24 @@ def simulate(
     stimulus = _resolve_stimulus(cfg, n, sugar_neurons, stimulus)
     probes = _resolve_probes(cfg, probes)
     carry = _init_carry(n, cfg, stimulus, seed)
-    carry, records = _run_scan(syn, carry, stimulus, cfg, probes, t_steps, n)
+    if chunk_steps is None and checkpoint_dir is None and cfg.health is None:
+        carry, records = _run_scan(syn, carry, stimulus, cfg, probes,
+                                   t_steps, n)
+    else:
+        ckpt = (SimCheckpointer(checkpoint_dir, async_save=async_checkpoint)
+                if checkpoint_dir is not None else None)
+
+        def run_chunk(cy, s, k):
+            return _run_scan(syn, cy, stimulus, cfg, probes, k, n,
+                             jnp.int32(s))
+
+        carry, records = run_chunked(
+            run_chunk, carry, t_steps, chunk_steps, time_axis=0,
+            health=cfg.health, n=n, dt_ms=cfg.params.dt,
+            checkpointer=ckpt, resume=resume)
     return SimResult(counts=carry.counts, state=carry.lif,
                      dropped=carry.dropped, raster=records.get("raster"),
-                     records=records)
+                     records=records, stats=dict(carry.stats))
 
 
 def spike_rates_hz(counts: jax.Array, t_steps: int, dt_ms: float) -> jax.Array:

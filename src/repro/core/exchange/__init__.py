@@ -15,6 +15,9 @@ blocked  sharded Pallas tile store: event exchange across the cut,
          remap into the global spike-block space); with
          ``sim.engine="blocked_fused"`` the local kernel also integrates
          (fused delivery->LIF, currents never leave VMEM)
+faulty   fault-injection wrapper around any of the above: dropped/corrupt
+         payloads at configured steps, host-side partition failures and
+         stragglers — the resilience layer's CI test double
 ======== ==================================================================
 
 See ``docs/distributed.md`` for the comparison and
@@ -24,10 +27,11 @@ See ``docs/distributed.md`` for the comparison and
 from .base import (ExchangeScheme, Topology, available_schemes, get_scheme,
                    memoized_build, register_scheme)
 from .arrays import DistArrays, build_dist_arrays
-from . import bitmap, blocked, event, local   # noqa: F401 (register)
+from . import bitmap, blocked, event, faulty, local   # noqa: F401 (register)
 from .bitmap import BitmapExchange
 from .blocked import BlockedExchange, ShardedBlockedState
 from .event import EventExchange, gather_active_events
+from .faulty import ExchangeFault, FaultSpec, FaultyExchange, configure_faulty
 from .local import LocalExchange
 
 __all__ = [
@@ -36,4 +40,5 @@ __all__ = [
     "DistArrays", "build_dist_arrays",
     "BitmapExchange", "BlockedExchange", "EventExchange", "LocalExchange",
     "ShardedBlockedState", "gather_active_events",
+    "ExchangeFault", "FaultSpec", "FaultyExchange", "configure_faulty",
 ]

@@ -1,0 +1,383 @@
+"""Resilience layer: in-scan health sentinels, chunked supervised scans,
+checkpoint/resume, and the crash/escalation supervisor.
+
+The paper's headline result is a *long-running* whole-brain simulation
+whose correctness is established statistically (Brian2 ↔ STACS ↔ Loihi
+parity) — which means a silent NaN, a Q19.12 saturation cascade, or an
+uncounted capacity overflow partway through a run quietly invalidates the
+science.  This module makes those failure modes observable and
+survivable without touching the scan's arithmetic:
+
+* **Sentinels** (:func:`health_stats_init` / :func:`health_step_stats`)
+  are scalar counters accumulated *inside* the jitted scan at near-zero
+  cost — non-finite v/g entries on the float path, saturation-at-clip on
+  the int32 Q19.12 path — and surfaced through ``SimResult.stats`` /
+  ``DistResult.stats`` next to the scheme counters.
+* **Chunked supervision** (:func:`run_chunked`): a T-step run becomes
+  ceil(T/K) reuses of one compiled K-step program with the carry threaded
+  through host-side — bit-identical to the monolithic scan (the step
+  index is offset by a *traced* ``t0``, so every chunk reuses the same
+  program) — giving the host a supervision point every K steps where
+  :class:`HealthConfig` thresholds are checked against the per-chunk
+  counter deltas.
+* **Checkpoint/resume** (:class:`SimCheckpointer`): at chunk boundaries
+  the carry (and records-so-far) are written through
+  :mod:`repro.train.checkpoint` (atomic tmp+rename, optional async with a
+  joinable handle), so a killed run resumes from ``latest_step`` and
+  reproduces the uninterrupted run's raster/records bit-for-bit.
+* **Supervision policy** (:func:`run_resilient`, generalizing
+  :func:`repro.train.fault.run_with_recovery` beyond its ``resume=-1``
+  magic value): poison (NaN / saturation / rate-envelope) raises
+  :class:`SimulationHealthError` naming the step and counter; a crash
+  restarts from the latest checkpoint; a drop-rate breach re-derives an
+  escalated :class:`~repro.core.capacity.CapacityConfig` and resumes
+  from the last *healthy* checkpoint — drops stay exactly accounted
+  throughout because the breached chunk is never checkpointed.
+
+Fault injection for exercising all of this without hardware lives in
+:mod:`repro.core.exchange.faulty`.  See ``docs/resilience.md``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from .capacity import CapacityConfig
+
+
+# --------------------------------------------------------------------------
+# Config + error
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class HealthConfig:
+    """Thresholds checked at each chunk boundary (host-side, against the
+    per-chunk deltas of the in-scan counters).  Hashable — it rides on
+    :class:`~repro.core.engine.SimConfig` and is part of the jit cache
+    key, so enabling health retraces but never changes scan semantics.
+
+    ``max_nonfinite`` / ``max_saturated`` bound the *poison* counters
+    (float non-finite v/g entries; Q19.12 |x| within ``sat_margin_bits``
+    of the int32 limit — the saturation-at-clip regime where fixed-point
+    arithmetic silently corrupts, per Dey & Dimitrov).  ``max_drop_rate``
+    bounds dropped synapse events per step (the recoverable breach — see
+    :func:`run_resilient`'s escalation policy).  ``rate_lo_hz`` /
+    ``rate_hi_hz`` bound the per-chunk mean population rate (a dead or
+    runaway network is a health event even when every number is finite).
+    """
+
+    max_nonfinite: int = 0
+    max_saturated: int = 0
+    sat_margin_bits: int = 2       # |x| >= 2**(31 - margin) counts saturated
+    max_drop_rate: Optional[float] = None   # dropped synapse events / step
+    rate_lo_hz: Optional[float] = None      # per-chunk mean pop rate bounds
+    rate_hi_hz: Optional[float] = None
+
+
+class SimulationHealthError(RuntimeError):
+    """A health threshold was breached at a chunk boundary.
+
+    ``kind`` is the counter (``nonfinite`` / ``saturated`` /
+    ``drop_rate`` / ``rate_envelope``), ``step`` the simulation step of
+    the chunk boundary that detected it, ``value`` the offending
+    per-chunk measurement.  Poison kinds are deterministic corruption —
+    restarting reproduces them — so :func:`run_resilient` re-raises
+    them; ``drop_rate`` is recoverable by capacity escalation.
+    """
+
+    def __init__(self, kind: str, step: int, value, threshold):
+        self.kind, self.step, self.value, self.threshold = \
+            kind, step, value, threshold
+        super().__init__(
+            f"health breach at step {step}: {kind}={value} "
+            f"(threshold {threshold})")
+
+
+#: kinds that escalation can fix (everything else is poison)
+RECOVERABLE_KINDS = ("drop_rate",)
+
+
+# --------------------------------------------------------------------------
+# In-scan sentinels
+# --------------------------------------------------------------------------
+
+def health_stats_init(sim) -> dict:
+    """Zero-initialized sentinel counters for ``sim`` (merged into the
+    scan carry's ``stats`` dict next to the exchange-scheme counters).
+    Empty when ``sim.health`` is None — the counters then cost nothing
+    and the carry pytree is unchanged."""
+    if getattr(sim, "health", None) is None:
+        return {}
+    if sim.fixed_point:
+        return {"h_saturated": jnp.int32(0)}
+    return {"h_nonfinite": jnp.int32(0)}
+
+
+def health_step_stats(lif, sim) -> dict:
+    """Per-step sentinel increments, traced inside the scan body.
+
+    Float path: count non-finite entries of v and g.  Q19.12 path: count
+    entries within ``sat_margin_bits`` of the int32 limit — int32 wraps
+    rather than clips in jnp, so the margin catches the cascade *before*
+    wraparound makes it unattributable."""
+    hc = getattr(sim, "health", None)
+    if hc is None:
+        return {}
+    if sim.fixed_point:
+        thresh = jnp.int32(1 << (31 - hc.sat_margin_bits))
+        sat = (jnp.sum((lif.v >= thresh) | (lif.v <= -thresh))
+               + jnp.sum((lif.g >= thresh) | (lif.g <= -thresh)))
+        return {"h_saturated": sat.astype(jnp.int32)}
+    nf = jnp.sum(~jnp.isfinite(lif.v)) + jnp.sum(~jnp.isfinite(lif.g))
+    return {"h_nonfinite": nf.astype(jnp.int32)}
+
+
+# --------------------------------------------------------------------------
+# Chunk-boundary supervision
+# --------------------------------------------------------------------------
+
+class HealthSnapshot(NamedTuple):
+    """Host-side reduction of the carry's cumulative counters at a chunk
+    boundary.  Works on both the monolithic carry and the
+    partition-stacked (or trial-batched) distributed carry — every field
+    is a plain sum over all leading axes."""
+
+    step: int
+    spikes: int
+    dropped: int
+    nonfinite: int
+    saturated: int
+
+
+def snapshot(step: int, carry) -> HealthSnapshot:
+    st = carry.stats
+    return HealthSnapshot(
+        step=int(step),
+        spikes=int(np.asarray(carry.counts).sum()),
+        dropped=int(np.asarray(carry.dropped).sum()),
+        nonfinite=int(np.asarray(st["h_nonfinite"]).sum())
+        if "h_nonfinite" in st else 0,
+        saturated=int(np.asarray(st["h_saturated"]).sum())
+        if "h_saturated" in st else 0,
+    )
+
+
+def check_chunk(prev: HealthSnapshot, now: HealthSnapshot, hc: HealthConfig,
+                *, n: int, dt_ms: float) -> None:
+    """Check one chunk's counter deltas against ``hc``; raises
+    :class:`SimulationHealthError` naming the step and counter."""
+    steps = now.step - prev.step
+    if steps <= 0:
+        return
+    d_nf = now.nonfinite - prev.nonfinite
+    if d_nf > hc.max_nonfinite:
+        raise SimulationHealthError("nonfinite", now.step, d_nf,
+                                    hc.max_nonfinite)
+    d_sat = now.saturated - prev.saturated
+    if d_sat > hc.max_saturated:
+        raise SimulationHealthError("saturated", now.step, d_sat,
+                                    hc.max_saturated)
+    if hc.max_drop_rate is not None:
+        rate = (now.dropped - prev.dropped) / steps
+        if rate > hc.max_drop_rate:
+            raise SimulationHealthError("drop_rate", now.step, rate,
+                                        hc.max_drop_rate)
+    if hc.rate_lo_hz is not None or hc.rate_hi_hz is not None:
+        hz = (now.spikes - prev.spikes) / (n * steps * dt_ms * 1e-3)
+        lo = hc.rate_lo_hz if hc.rate_lo_hz is not None else -np.inf
+        hi = hc.rate_hi_hz if hc.rate_hi_hz is not None else np.inf
+        if not lo <= hz <= hi:
+            raise SimulationHealthError("rate_envelope", now.step,
+                                        round(hz, 4), (lo, hi))
+
+
+# --------------------------------------------------------------------------
+# Checkpointing at chunk boundaries
+# --------------------------------------------------------------------------
+
+_RECORD_KEY = re.compile(r"^\['records'\]/\['(\w+)'\]$")
+
+
+class SimCheckpointer:
+    """Carry + records-so-far checkpoints through
+    :mod:`repro.train.checkpoint` (atomic tmp+rename already handles a
+    crash mid-save).  ``async_save`` overlaps the npz write with the next
+    chunk; the handle is joined before the next save and at run end, so
+    the newest checkpoint can never be dropped by a fast exit."""
+
+    def __init__(self, directory: str, async_save: bool = False,
+                 every: int = 1):
+        self.directory = str(directory)
+        self.async_save = async_save
+        self.every = max(1, int(every))
+        self._handle = None
+        self._saved = 0
+
+    def save(self, step: int, carry, records: dict) -> None:
+        from repro.train.checkpoint import save_checkpoint
+        self._saved += 1
+        if self._saved % self.every:
+            return
+        self.join()
+        self._handle = save_checkpoint(
+            self.directory, int(step), {"carry": carry,
+                                        "records": dict(records)},
+            metadata={"sim_step": int(step)}, async_save=self.async_save)
+
+    def join(self) -> None:
+        if self._handle is not None:
+            self._handle.join()
+            self._handle = None
+
+    def latest(self) -> Optional[int]:
+        from repro.train.checkpoint import latest_step
+        return latest_step(self.directory)
+
+    def restore_latest(self, carry_template):
+        """-> (carry, records, step) from the newest checkpoint, or None.
+        ``carry_template`` supplies structure + shapes + dtypes (the
+        restore is shape- AND dtype-checked: a Q19.12 int32 carry can
+        never silently cast into a float target)."""
+        from repro.train.checkpoint import (read_checkpoint_arrays,
+                                            restore_checkpoint)
+        step = self.latest()
+        if step is None:
+            return None
+        tree, meta = restore_checkpoint(self.directory, step,
+                                        {"carry": carry_template})
+        raw, _ = read_checkpoint_arrays(self.directory, step)
+        records = {m.group(1): jnp.asarray(v) for k, v in raw.items()
+                   if (m := _RECORD_KEY.match(k))}
+        return tree["carry"], records, int(meta.get("sim_step", step))
+
+
+# --------------------------------------------------------------------------
+# The chunked driver (shared by simulate() and simulate_distributed())
+# --------------------------------------------------------------------------
+
+def concat_records(chunks: list[dict], axis: int) -> dict:
+    """Concatenate per-chunk record dicts along the time axis."""
+    chunks = [c for c in chunks if c]
+    if not chunks:
+        return {}
+    if len(chunks) == 1:
+        return chunks[0]
+    return {k: jnp.concatenate([c[k] for c in chunks], axis=axis)
+            for k in chunks[0]}
+
+
+def run_chunked(run_chunk: Callable[[Any, int, int], tuple],
+                carry, t_steps: int, chunk_steps: Optional[int], *,
+                time_axis: int = 0, health: Optional[HealthConfig] = None,
+                n: int = 1, dt_ms: float = 0.1,
+                checkpointer: Optional[SimCheckpointer] = None,
+                resume: bool = False, host_hook=None):
+    """Drive ``ceil(T/K)`` chunked scans with host supervision between
+    them: ``run_chunk(carry, start_step, k) -> (carry, records)`` runs one
+    K-step compiled program starting at ``start_step``.
+
+    Health thresholds are checked (and raise) *before* the chunk is
+    checkpointed, so the last checkpoint on disk is always the last
+    *healthy* boundary — the supervisor's escalation resume point.
+    ``host_hook(start, stop)`` runs before each chunk (the fault-injection
+    scheme's host-side failure/straggler hook)."""
+    chunk_steps = t_steps if not chunk_steps else int(chunk_steps)
+    if chunk_steps <= 0:
+        raise ValueError(f"chunk_steps must be positive, got {chunk_steps}")
+    start = 0
+    chunks: list[dict] = []
+    if checkpointer is not None and resume:
+        restored = checkpointer.restore_latest(carry)
+        if restored is not None:
+            carry, saved_records, start = restored
+            if saved_records:
+                chunks.append(saved_records)
+    prev = snapshot(start, carry) if health is not None else None
+    s = start
+    while s < t_steps:
+        k = min(chunk_steps, t_steps - s)
+        if host_hook is not None:
+            host_hook(s, s + k)
+        carry, rec = run_chunk(carry, s, k)
+        chunks.append(rec)
+        if health is not None:
+            now = snapshot(s + k, carry)
+            check_chunk(prev, now, health, n=n, dt_ms=dt_ms)
+            prev = now
+        if checkpointer is not None:
+            checkpointer.save(s + k, carry, concat_records(chunks, time_axis))
+        s += k
+    if checkpointer is not None:
+        checkpointer.join()
+    return carry, concat_records(chunks, time_axis)
+
+
+# --------------------------------------------------------------------------
+# Supervisor
+# --------------------------------------------------------------------------
+
+def run_resilient(run_fn: Callable[[Optional[int], Optional[CapacityConfig]],
+                                   Any],
+                  checkpoint_dir: Optional[str] = None,
+                  max_restarts: int = 3,
+                  capacity: Optional[CapacityConfig] = None,
+                  escalate=None, max_escalations: int = 4):
+    """Supervise ``run_fn(resume_step, capacity)`` to completion.
+
+    Generalizes :func:`repro.train.fault.run_with_recovery`: the resume
+    signal is the explicit ``latest_step(checkpoint_dir)`` (or None when
+    no checkpoint exists yet), never a magic value.  Policy:
+
+    * **crash** (any ``RuntimeError`` that is not a health breach — e.g.
+      an injected partition failure from the ``faulty`` exchange scheme):
+      restart from the latest checkpoint, up to ``max_restarts`` times;
+    * **drop-rate breach** (:class:`SimulationHealthError` with
+      ``kind="drop_rate"``): call ``escalate(error, capacity) ->
+      CapacityConfig`` (default: double every budget via
+      :func:`repro.core.capacity.escalate_capacity`) and resume from the
+      last *healthy* checkpoint, up to ``max_escalations`` times —
+      converging to a lossless run with drops exactly accounted, because
+      the breached chunk was never checkpointed and is re-run under the
+      larger budgets;
+    * **poison** (``nonfinite`` / ``saturated`` / ``rate_envelope``):
+      deterministic corruption — re-raise immediately.
+    """
+    from repro.train.checkpoint import latest_step
+    from .capacity import escalate_capacity
+    if escalate is None:
+        escalate = lambda e, cap: escalate_capacity(cap)  # noqa: E731
+    restarts = escalations = 0
+    resume: Optional[int] = None
+
+    def _latest():
+        return latest_step(checkpoint_dir) if checkpoint_dir else None
+
+    while True:
+        try:
+            return run_fn(resume, capacity)
+        except SimulationHealthError as e:
+            if e.kind not in RECOVERABLE_KINDS:
+                raise
+            escalations += 1
+            if escalations > max_escalations:
+                raise
+            capacity = escalate(e, capacity)
+            if capacity is None:
+                raise   # escalation policy declined — surface the breach
+            resume = _latest()
+        except RuntimeError:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            resume = _latest()
+
+
+__all__ = ["HealthConfig", "HealthSnapshot", "RECOVERABLE_KINDS",
+           "SimCheckpointer", "SimulationHealthError", "check_chunk",
+           "concat_records", "health_stats_init", "health_step_stats",
+           "run_chunked", "run_resilient", "snapshot"]

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from .exchange.base import ExchangeScheme, Topology
+from .health import health_step_stats
 from .neuron import LIFState
 
 
@@ -68,7 +69,12 @@ def sim_step(carry: SimCarry, t, *, scheme: ExchangeScheme, state, stim,
     keys = jax.random.split(carry.key, n_split(stim))
     delayed = carry.ring[carry.ptr]
 
-    payload = scheme.exchange(state, delayed, cap, topo)
+    # Optional step-aware exchange (the fault-injection wrapper needs the
+    # step index to corrupt/drop payloads at configured steps); ordinary
+    # schemes keep the t-free protocol method.
+    ex_at = getattr(scheme, "exchange_at", None)
+    payload = (scheme.exchange(state, delayed, cap, topo) if ex_at is None
+               else ex_at(state, delayed, cap, topo, t))
     sstate, drive = stim.step(carry.stim, keys[1:], t, topo.part_size, p)
     if _scheme_fuses_lif(scheme, sim):
         # fused fast path: the engine already integrated (delivery + LIF
@@ -85,6 +91,10 @@ def sim_step(carry: SimCarry, t, *, scheme: ExchangeScheme, state, stim,
 
     ring = carry.ring.at[carry.ptr].set(spikes)
     ptr = (carry.ptr + 1) % p.delay_steps
+    # health sentinels (repro.core.health) accumulate next to the scheme
+    # counters; both dicts are keyed disjointly and the carry's stats
+    # structure is the static union fixed at init time
+    stats = {**stats, **health_step_stats(lif, sim)}
     new = SimCarry(
         lif=lif, ring=ring, ptr=ptr, key=keys[0],
         counts=carry.counts + spikes.astype(jnp.int32),
@@ -96,16 +106,24 @@ def sim_step(carry: SimCarry, t, *, scheme: ExchangeScheme, state, stim,
 
 
 def scan_steps(scheme: ExchangeScheme, state, carry: SimCarry, stim, sim,
-               cap, topo: Topology, probes, t_steps: int, *, pad_mask=None,
-               voltage_rows=None):
+               cap, topo: Topology, probes, t_steps: int, *, t0=None,
+               pad_mask=None, voltage_rows=None):
     """Scan ``t_steps`` of :func:`sim_step` — the shared inner loop of every
     entry point (single-run, vmapped trials, emulated and shard_map
-    distributed)."""
+    distributed).
+
+    ``t0`` offsets the step indices (a *traced* scalar, so a chunked run
+    reuses one compiled K-step program for every chunk — the supervision
+    substrate of :mod:`repro.core.health`); the default None keeps the
+    historical 0-based program byte-identical."""
     def step(c, t):
         return sim_step(c, t, scheme=scheme, state=state, stim=stim, sim=sim,
                         cap=cap, topo=topo, probes=probes, pad_mask=pad_mask,
                         voltage_rows=voltage_rows)
-    return jax.lax.scan(step, carry, jnp.arange(t_steps, dtype=jnp.int32))
+    ts = jnp.arange(t_steps, dtype=jnp.int32)
+    if t0 is not None:
+        ts = ts + jnp.asarray(t0, jnp.int32)
+    return jax.lax.scan(step, carry, ts)
 
 
 __all__ = ["SimCarry", "scan_steps", "sim_step"]

@@ -21,23 +21,33 @@ class ParityStats:
     mean_rate_a: float
     mean_rate_b: float
     n_active: int
+    n_nonfinite: int = 0   # entries masked out (NaN/inf in either input)
 
     def summary(self) -> str:
         return (f"rmse={self.rmse_hz:.3f}Hz r={self.pearson_r:.4f} "
                 f"within1Hz={self.frac_within_1hz:.3f} "
                 f"mean_a={self.mean_rate_a:.2f}Hz mean_b={self.mean_rate_b:.2f}Hz "
-                f"active={self.n_active}")
+                f"active={self.n_active} nonfinite={self.n_nonfinite}")
 
 
 def parity(rates_a: np.ndarray, rates_b: np.ndarray,
            active_thresh_hz: float = 0.5) -> ParityStats:
-    """Compare index-matched per-neuron rates (averaged over trials)."""
+    """Compare index-matched per-neuron rates (averaged over trials).
+
+    Non-finite entries (a poisoned run fed in by accident — see
+    :mod:`repro.core.health`) are excluded from every statistic rather
+    than silently propagating NaN into all of them; the count is reported
+    as ``n_nonfinite`` so the caller can refuse a poisoned comparison."""
     rates_a = np.asarray(rates_a, np.float64)
     rates_b = np.asarray(rates_b, np.float64)
-    active = (rates_a > active_thresh_hz) | (rates_b > active_thresh_hz)
+    finite = np.isfinite(rates_a) & np.isfinite(rates_b)
+    n_nonfinite = int((~finite).sum())
+    active = ((rates_a > active_thresh_hz) | (rates_b > active_thresh_hz)) \
+        & finite
     a, b = rates_a[active], rates_b[active]
     if len(a) == 0:
-        return ParityStats(0.0, 1.0, 1.0, 0.0, 0.0, 0)
+        return ParityStats(0.0, 1.0, 1.0, 0.0, 0.0, 0,
+                           n_nonfinite=n_nonfinite)
     rmse = float(np.sqrt(np.mean((a - b) ** 2)))
     if np.std(a) > 0 and np.std(b) > 0:
         r = float(np.corrcoef(a, b)[0, 1])
@@ -50,6 +60,7 @@ def parity(rates_a: np.ndarray, rates_b: np.ndarray,
         mean_rate_a=float(a.mean()),
         mean_rate_b=float(b.mean()),
         n_active=int(active.sum()),
+        n_nonfinite=n_nonfinite,
     )
 
 

@@ -61,7 +61,40 @@ def main():
     from repro.core import available_schemes
     ap.add_argument("--dist-scheme", default="event",
                     choices=sorted(set(available_schemes()) - {"local"}))
+    # Chunked supervision / checkpoint-resume (docs/resilience.md): the
+    # CI kill-and-resume smoke drives these end to end.
+    ap.add_argument("--chunk-steps", type=int, default=0,
+                    help="supervise the run in K-step chunks "
+                         "(bit-identical to the monolithic scan; 0 = off)")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="checkpoint the carry at chunk boundaries")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the latest checkpoint in "
+                         "--checkpoint-dir")
+    ap.add_argument("--health", action="store_true",
+                    help="enable in-scan health sentinels + chunk-boundary "
+                         "threshold checks")
+    ap.add_argument("--max-drop-rate", type=float, default=None,
+                    help="health threshold: dropped synapse events per "
+                         "step (implies --health)")
+    ap.add_argument("--inject-fail-at-chunk", type=int, default=0,
+                    help="deterministic mid-run kill: run only N chunks "
+                         "then exit (requires --chunk-steps and "
+                         "--checkpoint-dir; resume with --resume)")
+    ap.add_argument("--digest", action="store_true",
+                    help="print a sha256 over raster+counts (enables the "
+                         "raster probe; the kill-and-resume smoke's "
+                         "bit-identity check)")
     args = ap.parse_args()
+
+    supervised = bool(args.chunk_steps or args.checkpoint_dir or args.resume
+                      or args.health or args.max_drop_rate is not None)
+    if supervised and args.trials > 1:
+        ap.error("chunked supervision flags require --trials 1")
+    if args.inject_fail_at_chunk and not (args.chunk_steps
+                                          and args.checkpoint_dir):
+        ap.error("--inject-fail-at-chunk requires --chunk-steps and "
+                 "--checkpoint-dir")
 
     fw = {"smoke": SMOKE, "bench": dataclasses.replace(
         SMOKE, n_neurons=20_000, target_synapses=600_000, t_sim_ms=100.0),
@@ -73,8 +106,22 @@ def main():
     cfg = dataclasses.replace(fw.sim, engine=args.engine,
                               fixed_point=fw.sim.fixed_point
                               or args.fixed_point)
+    if args.health or args.max_drop_rate is not None:
+        from repro.core import HealthConfig
+        cfg = dataclasses.replace(
+            cfg, health=HealthConfig(max_drop_rate=args.max_drop_rate))
     t_steps = int(round(t_ms / cfg.params.dt))
     dt_ms = cfg.params.dt
+    if args.inject_fail_at_chunk:
+        # deterministic "kill": stop after N supervised chunks; the
+        # checkpoints on disk are exactly what a SIGKILL would leave
+        t_steps = min(t_steps, args.inject_fail_at_chunk * args.chunk_steps)
+    probes = None
+    if args.digest:
+        from repro.exp.probes import ProbeSpec
+        probes = ProbeSpec(raster=True)
+    chunk_kw = dict(chunk_steps=args.chunk_steps or None,
+                    checkpoint_dir=args.checkpoint_dir, resume=args.resume)
 
     scen = get_scenario(args.scenario)
     # FlyWireConfig stays the source of truth for the sugar population
@@ -104,6 +151,7 @@ def main():
               f"scheme={args.dist_scheme})")
         dcfg = DistConfig(sim=cfg, scheme=args.dist_scheme)
         t0 = time.time()
+        raster = None
         if args.trials > 1:
             res = run_dist_trials(d, dcfg, t_steps, seeds=args.trials,
                                   emulate=args.emulate, stimulus=stim)
@@ -111,20 +159,50 @@ def main():
             dropped = int(np.asarray(res.dropped).sum())
         else:
             res = simulate_distributed(d, dcfg, t_steps, seed=0,
-                                       emulate=args.emulate, stimulus=stim)
+                                       emulate=args.emulate, stimulus=stim,
+                                       probes=probes, **chunk_kw)
             mean_counts = res.counts.astype(np.float64)
             dropped = res.dropped
+            raster = res.raster
         stats = "".join(f" {k}={int(np.asarray(v).sum())}"
                         for k, v in res.stats.items())
         print(f"[simulate] {max(args.trials, 1)} trial(s) x {t_steps} steps "
               f"in {time.time()-t0:.2f}s (dropped={dropped}{stats})")
+    elif supervised:
+        from repro.core import simulate
+        t0 = time.time()
+        res = simulate(c, cfg, t_steps, stimulus=stim, probes=probes,
+                       seed=0, **chunk_kw)
+        mean_counts = np.asarray(res.counts, np.float64)
+        dropped = int(np.asarray(res.dropped))
+        raster = res.raster
+        stats = "".join(f" {k}={int(np.asarray(v))}"
+                        for k, v in res.stats.items())
+        print(f"[simulate] 1 trial x {t_steps} supervised steps "
+              f"(K={args.chunk_steps or t_steps}) in {time.time()-t0:.2f}s "
+              f"(dropped={dropped}{stats})")
     else:
         t0 = time.time()
-        res = run_trials(c, cfg, t_steps, stimulus=stim, seeds=args.trials)
+        raster = None
+        res = run_trials(c, cfg, t_steps, stimulus=stim, seeds=args.trials,
+                         probes=probes)
         mean_counts = np.asarray(res.counts, np.float64).mean(axis=0)
         dropped = int(np.asarray(res.dropped).sum())
         print(f"[simulate] {args.trials} trial(s) x {t_steps} steps in "
               f"{time.time()-t0:.2f}s (dropped={dropped})")
+    if args.inject_fail_at_chunk:
+        print(f"[simulate] injected kill after chunk "
+              f"{args.inject_fail_at_chunk} — checkpoints in "
+              f"{args.checkpoint_dir}; rerun with --resume to continue")
+        return
+    if args.digest:
+        import hashlib
+        h = hashlib.sha256()
+        if raster is not None:
+            h.update(np.ascontiguousarray(np.asarray(raster)).tobytes())
+        h.update(np.ascontiguousarray(
+            mean_counts.astype(np.int64)).tobytes())
+        print(f"[simulate] digest {h.hexdigest()}")
 
     rates = np.asarray(spike_rates_hz(mean_counts, t_steps, dt_ms))
     active = (rates > 0.5).sum()

@@ -9,7 +9,15 @@ device_put with the *destination* sharding, so a job restarted on a
 different topology (elastic downscale: 2 pods -> 1 pod) resharding is a
 single device_put per leaf.  Saves are atomic (tmpdir + rename) so a crash
 mid-save never corrupts the latest complete step, and can run on a
-background thread (async=True) to overlap with training.
+background thread (async_save=True) to overlap with training/simulation —
+the returned :class:`CheckpointHandle` MUST be joined (the supervisor
+joins at chunk boundaries and before exit) so a fast exit can never drop
+the newest checkpoint, and join re-raises any write-thread failure
+instead of losing it.
+
+Restores are shape- AND dtype-checked against the target tree: a Q19.12
+int32 simulation carry restored into a float target would otherwise
+silently cast and corrupt the bit-faithful fixed-point path.
 """
 
 from __future__ import annotations
@@ -34,11 +42,42 @@ def _flatten_with_paths(tree):
     return out
 
 
+class CheckpointHandle:
+    """Joinable async-save handle.  ``join()`` blocks until the write
+    finishes and re-raises anything the write thread raised — an async
+    checkpoint failure must surface at the supervision point, not vanish
+    with a daemon thread."""
+
+    def __init__(self, fn):
+        self._error: Optional[BaseException] = None
+
+        def guarded():
+            try:
+                fn()
+            except BaseException as e:  # noqa: BLE001 — re-raised in join
+                self._error = e
+
+        self._thread = threading.Thread(target=guarded, daemon=True)
+        self._thread.start()
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        self._thread.join(timeout)
+        if self._thread.is_alive():
+            raise TimeoutError("checkpoint write still running")
+        if self._error is not None:
+            raise self._error
+
+    def done(self) -> bool:
+        return not self._thread.is_alive()
+
+
 def save_checkpoint(directory: str, step: int, tree, metadata: dict | None
-                    = None, async_save: bool = False):
-    """Blocking by default; async_save spawns a daemon thread after the
-    host transfer (device->host copy happens synchronously so the saved
-    state is the state at call time)."""
+                    = None, async_save: bool = False
+                    ) -> Optional[CheckpointHandle]:
+    """Blocking by default; ``async_save`` runs the npz write on a
+    background thread after the host transfer (device->host copy happens
+    synchronously so the saved state is the state at call time) and
+    returns a :class:`CheckpointHandle` the caller must join."""
     flat = _flatten_with_paths(tree)
     host = {k: np.asarray(v) for k, v in flat.items()}
 
@@ -60,9 +99,7 @@ def save_checkpoint(directory: str, step: int, tree, metadata: dict | None
         os.rename(tmp, final)
 
     if async_save:
-        t = threading.Thread(target=write, daemon=True)
-        t.start()
-        return t
+        return CheckpointHandle(write)
     write()
     return None
 
@@ -75,11 +112,28 @@ def latest_step(directory: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def read_checkpoint_arrays(directory: str, step: int
+                           ) -> tuple[dict[str, np.ndarray], dict]:
+    """Raw flat-key -> host array dict + user metadata, no target tree
+    needed — for callers that reconstruct variable-shape subtrees (e.g.
+    the simulation checkpointer's records-so-far, whose time axis grows
+    every chunk) from the manifest instead of a template."""
+    path = os.path.join(directory, f"step_{step}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    z = np.load(os.path.join(path, "arrays.npz"))
+    return {k: z[k] for k in z.files}, manifest["metadata"]
+
+
 def restore_checkpoint(directory: str, step: int, target_tree,
                        shardings=None):
     """target_tree: pytree with the same structure (values or
     ShapeDtypeStructs).  shardings: optional matching tree of NamedSharding
-    — the elastic-reshard path (device_put onto the *current* mesh)."""
+    — the elastic-reshard path (device_put onto the *current* mesh).
+
+    Leaves in the checkpoint that the target tree does not reference are
+    ignored (a sub-tree restore); every referenced leaf is shape- and
+    dtype-checked against the target."""
     path = os.path.join(directory, f"step_{step}")
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
@@ -94,6 +148,12 @@ def restore_checkpoint(directory: str, step: int, target_tree,
         if tuple(arr.shape) != tuple(tgt.shape):
             raise ValueError(f"shape mismatch for {key}: "
                              f"ckpt {arr.shape} vs target {tgt.shape}")
+        tgt_dtype = getattr(tgt, "dtype", None)
+        if tgt_dtype is not None and np.dtype(arr.dtype) != np.dtype(tgt_dtype):
+            # a silent cast here corrupts the bit-faithful Q19.12 path
+            # (int32 carry -> float target loses the fixed-point contract)
+            raise ValueError(f"dtype mismatch for {key}: "
+                             f"ckpt {arr.dtype} vs target {tgt_dtype}")
         leaves.append(jax.device_put(arr, shd) if shd is not None
                       else jax.numpy.asarray(arr))
     tree = jax.tree_util.tree_unflatten(

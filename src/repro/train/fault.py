@@ -66,10 +66,18 @@ def simulate_failures(step: int, cfg: FaultConfig):
 
 
 def run_with_recovery(run_fn: Callable[[Optional[int]], int],
-                      max_restarts: int = 3) -> int:
+                      max_restarts: int = 3,
+                      checkpoint_dir: Optional[str] = None) -> int:
     """Supervisor loop: run_fn(resume_step) runs until completion or raises;
     on failure it is restarted from the latest checkpoint.  Returns the
-    final step.  run_fn returns the last completed step."""
+    final step.  run_fn returns the last completed step.
+
+    With ``checkpoint_dir``, the restart signal is the explicit
+    ``latest_step(checkpoint_dir)`` (None when no checkpoint exists yet —
+    a cold restart); without it, the legacy ``-1`` sentinel is passed and
+    run_fn must resolve the latest checkpoint itself.  The generalized
+    simulation supervisor (crash recovery + health-breach escalation)
+    is :func:`repro.core.health.run_resilient`."""
     restarts = 0
     resume = None
     while True:
@@ -79,4 +87,8 @@ def run_with_recovery(run_fn: Callable[[Optional[int]], int],
             restarts += 1
             if restarts > max_restarts:
                 raise
-            resume = -1   # signal: reload latest checkpoint
+            if checkpoint_dir is not None:
+                from .checkpoint import latest_step
+                resume = latest_step(checkpoint_dir)
+            else:
+                resume = -1   # legacy signal: reload latest checkpoint

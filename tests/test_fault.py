@@ -90,3 +90,37 @@ def test_elastic_restore_changes_layout(tmp_path):
                                      shardings)
     for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_recovery_with_explicit_checkpoint_dir(tmp_path):
+    """With checkpoint_dir, the supervisor hands run_fn the explicit
+    latest_step instead of the legacy -1 sentinel."""
+    ckpt = str(tmp_path)
+    save_checkpoint(ckpt, 6, {"x": jnp.zeros(2)})
+    signals = []
+
+    def attempt(resume_signal):
+        signals.append(resume_signal)
+        if len(signals) == 1:
+            raise InjectedFailure("node died")
+        return 10
+
+    assert run_with_recovery(attempt, max_restarts=2,
+                             checkpoint_dir=ckpt) == 10
+    assert signals == [None, 6]
+
+
+def test_recovery_cold_restart_signal(tmp_path):
+    """No checkpoint on disk yet -> the restart signal stays None (a cold
+    restart), never -1."""
+    signals = []
+
+    def attempt(resume_signal):
+        signals.append(resume_signal)
+        if len(signals) == 1:
+            raise InjectedFailure("early death")
+        return 1
+
+    run_with_recovery(attempt, max_restarts=2,
+                      checkpoint_dir=str(tmp_path / "empty"))
+    assert signals == [None, None]

@@ -128,3 +128,39 @@ def test_data_pipeline_determinism():
     # labels are the shifted stream
     full_a = np.asarray(a["tokens"])[:, 1:]
     np.testing.assert_array_equal(full_a, np.asarray(a["labels"])[:, :-1])
+
+
+def test_restore_rejects_dtype_mismatch(tmp_path):
+    """A Q19.12 int32 leaf restored into a float template must raise, not
+    silently cast (the cast would corrupt the fixed-point contract)."""
+    tree = {"v": jnp.arange(8, dtype=jnp.int32)}
+    save_checkpoint(str(tmp_path), 1, tree)
+    good, _ = restore_checkpoint(
+        str(tmp_path), 1, {"v": jax.ShapeDtypeStruct((8,), jnp.int32)})
+    np.testing.assert_array_equal(np.asarray(good["v"]), np.arange(8))
+    with pytest.raises(ValueError, match="dtype mismatch"):
+        restore_checkpoint(
+            str(tmp_path), 1, {"v": jax.ShapeDtypeStruct((8,), jnp.float32)})
+
+
+def test_async_save_handle_propagates_errors(tmp_path):
+    """join() must re-raise a write-thread failure instead of losing it
+    with a daemon thread."""
+    blocker = tmp_path / "not_a_dir"
+    blocker.write_text("occupied")
+    h = save_checkpoint(str(blocker), 1, {"x": jnp.zeros(2)},
+                        async_save=True)
+    with pytest.raises(OSError):
+        h.join()
+    assert h.done()
+
+
+def test_checkpoint_ignores_extra_leaves(tmp_path):
+    """Sub-tree restore: checkpoint leaves the target does not reference
+    are ignored (the simulation checkpointer restores the carry from a
+    {carry, records} checkpoint this way)."""
+    save_checkpoint(str(tmp_path), 2,
+                    {"a": jnp.ones(3), "b": jnp.zeros(5)})
+    out, _ = restore_checkpoint(
+        str(tmp_path), 2, {"a": jax.ShapeDtypeStruct((3,), jnp.float32)})
+    assert set(out) == {"a"}
