@@ -30,7 +30,9 @@ supervision rows (``engine_step.event.chunked.{K}`` and the
 ``.checkpointed`` variant) price the resilience layer's chunk
 boundaries (docs/resilience.md): same bit-identical run, one compiled
 K-step program reused ceil(T/K) times, with and without an atomic npz
-checkpoint per boundary.
+checkpoint per boundary.  The ``engine_step.event.telemetry_overhead``
+row prices the repro.obs streamed-event layer (docs/observability.md)
+against the same chunked run — the < 2%-of-step-time contract.
 
 ``smoke=True`` shrinks every scale knob to CI size: a harness-breakage
 canary (imports, retracing, capacity plumbing), not a measurement.
@@ -223,6 +225,31 @@ def run(full: bool = False, smoke: bool = False):
                         f"steps/sec ({t_ck/t_steps*1e3:.3f} ms/step, n={c.n}, "
                         f"K={K}; atomic npz checkpoint at every chunk "
                         f"boundary, {over:+.1f}% vs monolithic)"))
+
+    # --- telemetry overhead (repro.obs): the identical chunked run with
+    #     an async JSONL event stream attached.  The layer's contract is
+    #     host-side, O(1) per chunk, bit-identical results — so the
+    #     streamed-events cost must stay within noise of the bare chunked
+    #     run (target < 2% of step time; docs/observability.md) ---
+    import os
+
+    from repro import obs
+    K = chunk_ks[0]
+    run_chunked_sim(K)
+    t_bare = timeit(lambda: run_chunked_sim(K), iters=2)
+    with tempfile.TemporaryDirectory() as _tdir:
+        def run_telemetered():
+            with obs.telemetry(os.path.join(_tdir, "run.jsonl")):
+                return run_chunked_sim(K)
+        run_telemetered()   # warm the instrumented compile cache
+        t_tele = timeit(run_telemetered, iters=2)
+    over = (t_tele - t_bare) / t_bare * 100
+    rows.append(row("engine_step.event.telemetry_overhead",
+                    f"{over:+.1f}%",
+                    f"telemetered vs bare chunked run (K={K}, n={c.n}, "
+                    f"{t_steps/t_tele:.1f} vs {t_steps/t_bare:.1f} "
+                    f"steps/sec; async JSONL sink, one event/chunk "
+                    f"boundary — contract: < 2% of step time)"))
 
     # --- fused delivery->LIF (blocked_fused): one kernel per step runs
     #     spike->gather->accumulate->integrate->threshold per 128-row

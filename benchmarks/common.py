@@ -18,12 +18,21 @@ FULL_SYN = 15_000_000
 
 
 def timeit(fn, *args, warmup=1, iters=3):
+    """Median wall time of ``fn(*args)`` with the result blocked on.
+
+    JAX dispatch is async: without ``block_until_ready`` inside the timed
+    region a returned-but-still-executing computation under-reports, and
+    an unblocked warmup lets the first timed iteration absorb the tail of
+    the warmup's execution.  Non-array results (host-side fns) pass
+    through untouched."""
+    import jax
+
     for _ in range(warmup):
-        fn(*args)
+        jax.block_until_ready(fn(*args))
     ts = []
     for _ in range(iters):
         t0 = time.perf_counter()
-        fn(*args)
+        jax.block_until_ready(fn(*args))
         ts.append(time.perf_counter() - t0)
     return float(np.median(ts))
 

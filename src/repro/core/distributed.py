@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 import warnings
 from typing import Any, NamedTuple, Optional
 
@@ -41,12 +42,15 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro import obs
+
 from .capacity import DISTRIBUTED_CAPACITY, CapacityConfig, merge_legacy_capacity
 from .dcsr import DCSR
 from .engine import SimConfig
 from .exchange import (DistArrays, Topology, available_schemes,
                        build_dist_arrays, get_scheme)
-from .health import SimCheckpointer, health_stats_init, run_chunked
+from .health import (SimCheckpointer, carry_counters, health_stats_init,
+                     run_chunked)
 from .neuron import LIFState, init_state
 from .step import SimCarry, scan_steps
 
@@ -183,9 +187,9 @@ def _partition_run(scheme, cfg: DistConfig, probes, t_steps: int,
 
 @functools.partial(jax.jit, static_argnums=(0, 6, 7, 8, 9),
                    donate_argnums=(1,))
-def _run_emulated(scheme_name: str, carry, state, stim, pad, vrows,
-                  cfg: DistConfig, probes, t_steps: int, trials: bool,
-                  t0=None):
+def _run_emulated_jit(scheme_name: str, carry, state, stim, pad, vrows,
+                      cfg: DistConfig, probes, t_steps: int, trials: bool,
+                      t0=None):
     """vmap over the partition dim with a named axis -> collectives work
     on one device (semantics-identical to the shard_map execution)."""
     P_, U = pad.shape
@@ -193,6 +197,14 @@ def _run_emulated(scheme_name: str, carry, state, stim, pad, vrows,
                              Topology(P_, U, axis=AXIS), trials)
     return jax.vmap(run_one, in_axes=(0, 0, 0, 0, 0, None),
                     axis_name=AXIS)(carry, state, stim, pad, vrows, t0)
+
+
+# Compile-cache instrumentation (repro.obs): per-signature hit/miss
+# counters and trace/compile wall with a telemetry session active; the
+# plain jit call otherwise.
+_run_emulated = obs.InstrumentedJit(_run_emulated_jit,
+                                    "distributed.run_emulated",
+                                    static_argnums=(0, 6, 7, 8, 9))
 
 
 @functools.lru_cache(maxsize=64)
@@ -210,10 +222,12 @@ def _shard_map_fn(scheme_name: str, cfg: DistConfig, probes, t_steps: int,
                       vrows[0], t0)
         return jax.tree.map(lambda x: x[None], out)
 
-    return jax.jit(shard_map(
-        sharded, mesh=mesh,
-        in_specs=(P(AXIS), P(AXIS), P(AXIS), P(AXIS), P(AXIS), P()),
-        out_specs=P(AXIS), check_rep=False))
+    return obs.InstrumentedJit(
+        jax.jit(shard_map(
+            sharded, mesh=mesh,
+            in_specs=(P(AXIS), P(AXIS), P(AXIS), P(AXIS), P(AXIS), P()),
+            out_specs=P(AXIS), check_rep=False)),
+        f"distributed.shard_map.{scheme_name}")
 
 
 def _run_shard_map(scheme_name: str, carry, state, stim, pad, vrows,
@@ -237,7 +251,8 @@ def _run_partitioned(d: DCSR, cfg: DistConfig, t_steps: int, keys,
             f"unknown distributed exchange scheme {cfg.scheme!r}; "
             f"available: {sorted(set(available_schemes()) - {'local'})}")
     scheme = get_scheme(cfg.scheme)
-    state = scheme.build(d, cfg.sim, cfg.capacity)
+    with obs.span("build", what="scheme_state", scheme=cfg.scheme):
+        state = scheme.build(d, cfg.sim, cfg.capacity)
     stim = _resolve_dist_stimulus(d, cfg.sim, sugar_neurons, stimulus)
     probes, vrows, owner = _resolve_dist_probes(d, cfg.sim, probes)
     pad = jnp.asarray(d.inv_perm.reshape(d.n_parts, d.part_size) >= 0)
@@ -252,8 +267,13 @@ def _run_partitioned(d: DCSR, cfg: DistConfig, t_steps: int, keys,
         return _run_shard_map(cfg.scheme, carry, state, stim, pad, vrows,
                               cfg, probes, k, trials, mesh, t0)
 
+    # a telemetry session routes single runs through the chunk driver
+    # (one chunk when chunk_steps is None) for the per-chunk event
+    # stream; the trial-batched path stays unsupervised (spans and
+    # compile metrics still apply)
     supervised = (chunk_steps is not None or checkpoint_dir is not None
-                  or cfg.sim.health is not None)
+                  or cfg.sim.health is not None
+                  or (obs.active() is not None and not trials))
     if not supervised:
         out, records = run(carry0, t_steps, None)
     else:
@@ -363,15 +383,33 @@ def simulate_distributed(
     :func:`repro.core.simulate`'s chunked supervision (bit-identical
     chunking, chunk-boundary health checks against ``cfg.sim.health``,
     checkpoint/resume) on the partitioned path; see ``docs/resilience.md``.
+    With a telemetry session active (:func:`repro.obs.telemetry`) the run
+    emits the same span/chunk/compile event stream as the monolithic
+    path and surfaces the compile cache on
+    ``DistResult.stats["compile_cache"]``; see ``docs/observability.md``.
     """
-    keys = jax.random.split(jax.random.PRNGKey(seed), d.n_parts)
-    out, records, probes, owner = _run_partitioned(
-        d, cfg, t_steps, keys, sugar_neurons, stimulus, probes, mesh,
-        emulate, trials=False, chunk_steps=chunk_steps,
-        checkpoint_dir=checkpoint_dir, resume=resume,
-        async_checkpoint=async_checkpoint)
-    counts, dropped, state, recs, stats = _assemble(d, out, records, probes,
-                                                    owner)
+    tele = obs.active()
+    with obs.span("simulate_distributed", scheme=cfg.scheme):
+        if tele is not None:
+            tele.emit("run_start", kind="simulate_distributed",
+                      scheme=cfg.scheme, n=d.n_orig, t_steps=t_steps,
+                      chunk_steps=chunk_steps,
+                      fixed_point=cfg.sim.fixed_point)
+        t_run = time.monotonic()
+        keys = jax.random.split(jax.random.PRNGKey(seed), d.n_parts)
+        out, records, probes, owner = _run_partitioned(
+            d, cfg, t_steps, keys, sugar_neurons, stimulus, probes, mesh,
+            emulate, trials=False, chunk_steps=chunk_steps,
+            checkpoint_dir=checkpoint_dir, resume=resume,
+            async_checkpoint=async_checkpoint)
+        counts, dropped, state, recs, stats = _assemble(d, out, records,
+                                                        probes, owner)
+        if tele is not None:
+            tele.emit("run_end", steps=t_steps,
+                      wall_s=round(time.monotonic() - t_run, 6),
+                      counters=carry_counters(out),
+                      metrics=tele.metrics.counters())
+            stats["compile_cache"] = tele.metrics.compile_snapshot()
     return DistResult(counts=counts, dropped=int(dropped), state=state,
                       raster=recs.get("raster"), records=recs, stats=stats)
 

@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 import warnings
 from typing import Any, NamedTuple, Optional
 
@@ -28,11 +29,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+
 from .capacity import MONOLITHIC_CAPACITY, CapacityConfig, merge_legacy_capacity
 from .connectome import Connectome
 from .engines import available_engines, get_engine
-from .health import (HealthConfig, SimCheckpointer, health_stats_init,
-                     run_chunked)
+from .health import (HealthConfig, SimCheckpointer, carry_counters,
+                     health_stats_init, run_chunked)
 from .neuron import LIFParams, LIFState, init_state
 from .step import SimCarry, scan_steps
 
@@ -80,7 +83,8 @@ def build_synapses(c: Connectome, cfg: SimConfig) -> Any:
     Returns the engine-specific state pytree; pass it back to
     :func:`simulate` via ``syn=`` to amortize the host-side build across
     repeated runs (benchmark pattern)."""
-    return get_engine(cfg.engine).build(c, cfg)
+    with obs.span("build", what="synapses", engine=cfg.engine):
+        return get_engine(cfg.engine).build(c, cfg)
 
 
 # --------------------------------------------------------------------------
@@ -116,19 +120,30 @@ def _scan_steps(syn, carry: SimCarry, stim, cfg: SimConfig, probes,
 
 
 @functools.partial(jax.jit, static_argnums=(3, 4, 5, 6), donate_argnums=(1,))
-def _run_scan(syn, carry: SimCarry, stim, cfg: SimConfig, probes,
-              t_steps: int, n: int, t0=None):
+def _run_scan_jit(syn, carry: SimCarry, stim, cfg: SimConfig, probes,
+                  t_steps: int, n: int, t0=None):
     return _scan_steps(syn, carry, stim, cfg, probes, t_steps, n, t0)
 
 
 @functools.partial(jax.jit, static_argnums=(3, 4, 5, 6), donate_argnums=(1,))
-def _run_scan_trials(syn, carry: SimCarry, stim, cfg: SimConfig, probes,
-                     t_steps: int, n: int, t0=None):
+def _run_scan_trials_jit(syn, carry: SimCarry, stim, cfg: SimConfig, probes,
+                         t_steps: int, n: int, t0=None):
     """Batched trials: vmap the scan over a leading seed/trial axis of the
     carry; syn and stim are broadcast (shared across trials)."""
     return jax.vmap(
         lambda cy: _scan_steps(syn, cy, stim, cfg, probes, t_steps, n, t0)
     )(carry)
+
+
+# Compile-cache instrumentation (repro.obs): with a telemetry session
+# active, calls are keyed per signature with hit/miss counters and
+# per-signature trace/compile wall + cost_analysis — the ROADMAP's
+# "surface hit rates".  Without a session these are the plain jit calls.
+_run_scan = obs.InstrumentedJit(_run_scan_jit, "engine.run_scan",
+                                static_argnums=(3, 4, 5, 6))
+_run_scan_trials = obs.InstrumentedJit(_run_scan_trials_jit,
+                                       "engine.run_trials",
+                                       static_argnums=(3, 4, 5, 6))
 
 
 def _init_carry(n: int, cfg: SimConfig, stimulus, seed: int) -> SimCarry:
@@ -202,31 +217,57 @@ def simulate(
     killed run restarted with ``resume=True`` reproduces the
     uninterrupted run bit-for-bit.  See :mod:`repro.core.health` and
     ``docs/resilience.md``.
+
+    With a telemetry session active (:func:`repro.obs.telemetry`), the
+    run emits phase spans, per-chunk JSONL events, and compile-cache
+    metrics (surfaced on ``SimResult.stats["compile_cache"]``) — all
+    host-side, results bit-identical to an uninstrumented run; see
+    ``docs/observability.md``.
     """
-    n = c.n
-    if syn is None:
-        syn = build_synapses(c, cfg)
-    stimulus = _resolve_stimulus(cfg, n, sugar_neurons, stimulus)
-    probes = _resolve_probes(cfg, probes)
-    carry = _init_carry(n, cfg, stimulus, seed)
-    if chunk_steps is None and checkpoint_dir is None and cfg.health is None:
-        carry, records = _run_scan(syn, carry, stimulus, cfg, probes,
-                                   t_steps, n)
-    else:
-        ckpt = (SimCheckpointer(checkpoint_dir, async_save=async_checkpoint)
-                if checkpoint_dir is not None else None)
+    tele = obs.active()
+    with obs.span("simulate", engine=cfg.engine):
+        n = c.n
+        if syn is None:
+            syn = build_synapses(c, cfg)
+        stimulus = _resolve_stimulus(cfg, n, sugar_neurons, stimulus)
+        probes = _resolve_probes(cfg, probes)
+        carry = _init_carry(n, cfg, stimulus, seed)
+        if tele is not None:
+            tele.emit("run_start", kind="simulate", engine=cfg.engine,
+                      n=n, t_steps=t_steps, chunk_steps=chunk_steps,
+                      fixed_point=cfg.fixed_point)
+        t_run = time.monotonic()
+        # telemetry routes through the supervised chunk driver (one chunk
+        # when chunk_steps is None) so the per-chunk event stream exists;
+        # the chunked scan is bit-identical to the monolithic one
+        if (chunk_steps is None and checkpoint_dir is None
+                and cfg.health is None and tele is None):
+            carry, records = _run_scan(syn, carry, stimulus, cfg, probes,
+                                       t_steps, n)
+        else:
+            ckpt = (SimCheckpointer(checkpoint_dir,
+                                    async_save=async_checkpoint)
+                    if checkpoint_dir is not None else None)
 
-        def run_chunk(cy, s, k):
-            return _run_scan(syn, cy, stimulus, cfg, probes, k, n,
-                             jnp.int32(s))
+            def run_chunk(cy, s, k):
+                return _run_scan(syn, cy, stimulus, cfg, probes, k, n,
+                                 jnp.int32(s))
 
-        carry, records = run_chunked(
-            run_chunk, carry, t_steps, chunk_steps, time_axis=0,
-            health=cfg.health, n=n, dt_ms=cfg.params.dt,
-            checkpointer=ckpt, resume=resume)
+            carry, records = run_chunked(
+                run_chunk, carry, t_steps, chunk_steps, time_axis=0,
+                health=cfg.health, n=n, dt_ms=cfg.params.dt,
+                checkpointer=ckpt, resume=resume)
+        stats = dict(carry.stats)
+        if tele is not None:
+            jax.block_until_ready(carry)
+            tele.emit("run_end", steps=t_steps,
+                      wall_s=round(time.monotonic() - t_run, 6),
+                      counters=carry_counters(carry),
+                      metrics=tele.metrics.counters())
+            stats["compile_cache"] = tele.metrics.compile_snapshot()
     return SimResult(counts=carry.counts, state=carry.lif,
                      dropped=carry.dropped, raster=records.get("raster"),
-                     records=records, stats=dict(carry.stats))
+                     records=records, stats=stats)
 
 
 def spike_rates_hz(counts: jax.Array, t_steps: int, dt_ms: float) -> jax.Array:

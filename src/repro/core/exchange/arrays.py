@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+
 from ..dcsr import DCSR
 from .base import memoized_build
 
@@ -83,7 +85,10 @@ def _build_dist_arrays(d: DCSR) -> DistArrays:
 def build_dist_arrays(d: DCSR) -> DistArrays:
     """Memoized on the DCSR instance — P≥8 setup cost is paid once per
     snapshot, not once per ``simulate_distributed`` call."""
-    return memoized_build(d, "dist_arrays", lambda: _build_dist_arrays(d))
+    def build():
+        with obs.span("build", what="dist_arrays"):
+            return _build_dist_arrays(d)
+    return memoized_build(d, "dist_arrays", build)
 
 
 def build_src_gfo(d: DCSR) -> jax.Array:

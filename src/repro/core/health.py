@@ -44,8 +44,11 @@ import dataclasses
 import re
 from typing import Any, Callable, NamedTuple, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro import obs
 
 from .capacity import CapacityConfig
 
@@ -154,6 +157,25 @@ class HealthSnapshot(NamedTuple):
     saturated: int
 
 
+@jax.jit
+def _sum_leaves(tree):
+    return jax.tree_util.tree_map(lambda v: jnp.asarray(v).sum(), tree)
+
+
+def carry_counters(carry) -> dict:
+    """Host-side reduction of every cumulative carry counter to a flat
+    name -> int dict (spikes, drops, scheme stats, health sentinels) —
+    the per-chunk-boundary telemetry record's payload.  Works on the
+    monolithic, partition-stacked, and trial-batched carries alike
+    (plain sums over all leading axes).  O(counters), not O(n): the only
+    per-neuron reduction (``counts.sum()``) happens on device, and the
+    whole dict reduces in ONE jitted dispatch + ONE transfer so the
+    per-chunk telemetry cost doesn't scale with the counter count."""
+    sums = jax.device_get(_sum_leaves(
+        {"spikes": carry.counts, "dropped": carry.dropped, **carry.stats}))
+    return {k: int(v) for k, v in sums.items()}
+
+
 def snapshot(step: int, carry) -> HealthSnapshot:
     st = carry.stats
     return HealthSnapshot(
@@ -218,16 +240,19 @@ class SimCheckpointer:
         self._handle = None
         self._saved = 0
 
-    def save(self, step: int, carry, records: dict) -> None:
+    def save(self, step: int, carry, records: dict) -> bool:
+        """Returns True when a checkpoint was actually written (the
+        ``every`` throttle may skip boundaries)."""
         from repro.train.checkpoint import save_checkpoint
         self._saved += 1
         if self._saved % self.every:
-            return
+            return False
         self.join()
         self._handle = save_checkpoint(
             self.directory, int(step), {"carry": carry,
                                         "records": dict(records)},
             metadata={"sim_step": int(step)}, async_save=self.async_save)
+        return True
 
     def join(self) -> None:
         if self._handle is not None:
@@ -285,10 +310,18 @@ def run_chunked(run_chunk: Callable[[Any, int, int], tuple],
     checkpointed, so the last checkpoint on disk is always the last
     *healthy* boundary — the supervisor's escalation resume point.
     ``host_hook(start, stop)`` runs before each chunk (the fault-injection
-    scheme's host-side failure/straggler hook)."""
+    scheme's host-side failure/straggler hook).
+
+    When a telemetry session is active (:mod:`repro.obs`), each chunk
+    boundary additionally emits one ``chunk`` event — wall time,
+    steps/sec, cumulative and per-chunk counter deltas — plus
+    ``checkpoint`` and ``health`` events as they happen.  All of it is
+    host-side and O(1) per chunk; the scan itself is untouched, so the
+    results stay bit-identical with telemetry on or off."""
     chunk_steps = t_steps if not chunk_steps else int(chunk_steps)
     if chunk_steps <= 0:
         raise ValueError(f"chunk_steps must be positive, got {chunk_steps}")
+    tele = obs.active()
     start = 0
     chunks: list[dict] = []
     if checkpointer is not None and resume:
@@ -298,19 +331,47 @@ def run_chunked(run_chunk: Callable[[Any, int, int], tuple],
             if saved_records:
                 chunks.append(saved_records)
     prev = snapshot(start, carry) if health is not None else None
+    prev_counters = carry_counters(carry) if tele is not None else None
     s = start
     while s < t_steps:
         k = min(chunk_steps, t_steps - s)
         if host_hook is not None:
             host_hook(s, s + k)
-        carry, rec = run_chunk(carry, s, k)
+        with obs.span("chunk", step=s) as sp:
+            carry, rec = run_chunk(carry, s, k)
+            if tele is not None:
+                # an honest per-chunk wall time needs the async dispatch
+                # drained; numerics are untouched
+                jax.block_until_ready(carry)
         chunks.append(rec)
+        if tele is not None:
+            counters = carry_counters(carry)
+            delta = {key: counters[key] - prev_counters.get(key, 0)
+                     for key in counters}
+            wall = max(sp.wall_s, 1e-9)
+            tele.emit("chunk", step=s + k, steps=k,
+                      wall_s=round(wall, 6),
+                      steps_per_s=round(k / wall, 3),
+                      counters=counters, delta=delta)
+            prev_counters = counters
         if health is not None:
             now = snapshot(s + k, carry)
-            check_chunk(prev, now, health, n=n, dt_ms=dt_ms)
+            try:
+                check_chunk(prev, now, health, n=n, dt_ms=dt_ms)
+            except SimulationHealthError as e:
+                if tele is not None:
+                    value = (float(e.value) if np.isscalar(e.value)
+                             else e.value)
+                    tele.emit("health", kind=e.kind, step=e.step,
+                              value=value, threshold=e.threshold)
+                raise
             prev = now
         if checkpointer is not None:
-            checkpointer.save(s + k, carry, concat_records(chunks, time_axis))
+            saved = checkpointer.save(s + k, carry,
+                                      concat_records(chunks, time_axis))
+            if saved and tele is not None:
+                tele.emit("checkpoint", step=s + k,
+                          async_save=checkpointer.async_save)
         s += k
     if checkpointer is not None:
         checkpointer.join()
@@ -346,38 +407,51 @@ def run_resilient(run_fn: Callable[[Optional[int], Optional[CapacityConfig]],
       larger budgets;
     * **poison** (``nonfinite`` / ``saturated`` / ``rate_envelope``):
       deterministic corruption — re-raise immediately.
+
+    With a telemetry session active, every supervision decision is
+    emitted: an ``escalation`` event per capacity escalation, a
+    ``restart`` event per crash recovery (``health`` breach events come
+    from :func:`run_chunked` itself).
     """
     from repro.train.checkpoint import latest_step
     from .capacity import escalate_capacity
     if escalate is None:
         escalate = lambda e, cap: escalate_capacity(cap)  # noqa: E731
+    tele = obs.active()
     restarts = escalations = 0
     resume: Optional[int] = None
 
     def _latest():
         return latest_step(checkpoint_dir) if checkpoint_dir else None
 
-    while True:
-        try:
-            return run_fn(resume, capacity)
-        except SimulationHealthError as e:
-            if e.kind not in RECOVERABLE_KINDS:
-                raise
-            escalations += 1
-            if escalations > max_escalations:
-                raise
-            capacity = escalate(e, capacity)
-            if capacity is None:
-                raise   # escalation policy declined — surface the breach
-            resume = _latest()
-        except RuntimeError:
-            restarts += 1
-            if restarts > max_restarts:
-                raise
-            resume = _latest()
+    with obs.span("run_resilient"):
+        while True:
+            try:
+                return run_fn(resume, capacity)
+            except SimulationHealthError as e:
+                if e.kind not in RECOVERABLE_KINDS:
+                    raise
+                escalations += 1
+                if escalations > max_escalations:
+                    raise
+                capacity = escalate(e, capacity)
+                if capacity is None:
+                    raise   # escalation policy declined — surface the breach
+                resume = _latest()
+                if tele is not None:
+                    tele.emit("escalation", attempt=escalations,
+                              resume_step=resume, kind=e.kind)
+            except RuntimeError as e:
+                restarts += 1
+                if restarts > max_restarts:
+                    raise
+                resume = _latest()
+                if tele is not None:
+                    tele.emit("restart", attempt=restarts,
+                              resume_step=resume, error=type(e).__name__)
 
 
 __all__ = ["HealthConfig", "HealthSnapshot", "RECOVERABLE_KINDS",
-           "SimCheckpointer", "SimulationHealthError", "check_chunk",
-           "concat_records", "health_stats_init", "health_step_stats",
-           "run_chunked", "run_resilient", "snapshot"]
+           "SimCheckpointer", "SimulationHealthError", "carry_counters",
+           "check_chunk", "concat_records", "health_stats_init",
+           "health_step_stats", "run_chunked", "run_resilient", "snapshot"]

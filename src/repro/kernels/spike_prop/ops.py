@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.connectome import Connectome
 from .kernel import SRC_BLK, TGT_BLK, spike_deliver_pallas
 
@@ -74,13 +75,15 @@ def tile_coo(tgt: np.ndarray, src: np.ndarray, w: np.ndarray,
 def build_blocked(c: Connectome, quantized: np.ndarray | None = None
                   ) -> BlockedSynapses:
     """Group the target-major CSR into dense tiles by (tgt//TB, src//SB)."""
-    n = c.n
-    n_tb = (n + TGT_BLK - 1) // TGT_BLK
-    n_sb = (n + SRC_BLK - 1) // SRC_BLK
-    w = (quantized if quantized is not None else c.in_weights).astype(np.float32)
-    tgt = np.repeat(np.arange(n, dtype=np.int64), c.fan_in)
-    blk_id, weights = tile_coo(tgt, c.in_indices, w, n_tb, n_sb)
-    occ = c.nnz / max(1, (blk_id < n_sb).sum() * TGT_BLK * SRC_BLK)
+    with obs.span("build", what="tile_store"):
+        n = c.n
+        n_tb = (n + TGT_BLK - 1) // TGT_BLK
+        n_sb = (n + SRC_BLK - 1) // SRC_BLK
+        w = (quantized if quantized is not None
+             else c.in_weights).astype(np.float32)
+        tgt = np.repeat(np.arange(n, dtype=np.int64), c.fan_in)
+        blk_id, weights = tile_coo(tgt, c.in_indices, w, n_tb, n_sb)
+        occ = c.nnz / max(1, (blk_id < n_sb).sum() * TGT_BLK * SRC_BLK)
     return BlockedSynapses(blk_id=blk_id, weights=weights, n=n, n_tb=n_tb,
                            n_sb=n_sb, occupancy=float(occ))
 
@@ -112,6 +115,11 @@ def build_blocked_sharded(d) -> ShardedBlockedSynapses:
     (weights as partitioned/quantized by ``build_dcsr``).  All partitions
     share one tile width E = max over partitions so the stores stack into
     uniform shard_map/vmap operands."""
+    with obs.span("build", what="tile_store_sharded"):
+        return _build_blocked_sharded(d)
+
+
+def _build_blocked_sharded(d) -> ShardedBlockedSynapses:
     P_, U = d.n_parts, d.part_size
     n_glob = P_ * U
     n_tb = (U + TGT_BLK - 1) // TGT_BLK

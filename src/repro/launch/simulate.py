@@ -19,11 +19,13 @@ XLA_FLAGS=--xla_force_host_platform_device_count=N first, or use
 from __future__ import annotations
 
 import argparse
+import contextlib
 import dataclasses
 import time
 
 import numpy as np
 
+from repro import obs
 from repro.configs.flywire import CONFIG, CONFIG_1MS, SMOKE
 from repro.core import (CoreBudget, SimConfig, caps_from_budget,
                         greedy_partition, parity, spike_rates_hz,
@@ -85,6 +87,15 @@ def main():
                     help="print a sha256 over raster+counts (enables the "
                          "raster probe; the kill-and-resume smoke's "
                          "bit-identity check)")
+    # Telemetry + profiling (docs/observability.md): the CI telemetry
+    # smoke drives --telemetry end to end (emit -> schema check -> report).
+    ap.add_argument("--telemetry", default=None, metavar="PATH",
+                    help="stream JSONL telemetry events to PATH "
+                         "(chunk/compile/span/health records; inspect with "
+                         "python -m repro.obs.report PATH)")
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="wrap the run in jax.profiler.trace(DIR) "
+                         "(TensorBoard-loadable XLA trace)")
     args = ap.parse_args()
 
     supervised = bool(args.chunk_steps or args.checkpoint_dir or args.resume
@@ -96,6 +107,31 @@ def main():
         ap.error("--inject-fail-at-chunk requires --chunk-steps and "
                  "--checkpoint-dir")
 
+    with contextlib.ExitStack() as stack:
+        if args.telemetry:
+            stack.enter_context(obs.telemetry(args.telemetry))
+        stack.enter_context(obs.profile_trace(args.profile))
+        _run(args, supervised)
+    if args.telemetry:
+        print(f"[simulate] telemetry stream: {args.telemetry} "
+              f"(python -m repro.obs.report {args.telemetry})")
+
+
+def _fmt_stats(stats: dict) -> str:
+    """Render result stats for the run line; nested dicts (the telemetry
+    compile-cache snapshot) get a compact hit/miss summary."""
+    out = []
+    for k, v in stats.items():
+        if isinstance(v, dict):
+            if k == "compile_cache":
+                out.append(f" cache_hits={v['hits']}"
+                           f"/{v['hits'] + v['misses']}")
+            continue
+        out.append(f" {k}={int(np.asarray(v).sum())}")
+    return "".join(out)
+
+
+def _run(args, supervised: bool):
     fw = {"smoke": SMOKE, "bench": dataclasses.replace(
         SMOKE, n_neurons=20_000, target_synapses=600_000, t_sim_ms=100.0),
         "full": (CONFIG if args.dt == 0.1 else CONFIG_1MS)}[args.scale]
@@ -164,11 +200,12 @@ def main():
             mean_counts = res.counts.astype(np.float64)
             dropped = res.dropped
             raster = res.raster
-        stats = "".join(f" {k}={int(np.asarray(v).sum())}"
-                        for k, v in res.stats.items())
+        stats = _fmt_stats(res.stats)
         print(f"[simulate] {max(args.trials, 1)} trial(s) x {t_steps} steps "
               f"in {time.time()-t0:.2f}s (dropped={dropped}{stats})")
-    elif supervised:
+    elif supervised or (args.telemetry and args.trials == 1):
+        # a single-trial telemetry run goes through simulate() so the
+        # full run_start/chunk/run_end event stream exists
         from repro.core import simulate
         t0 = time.time()
         res = simulate(c, cfg, t_steps, stimulus=stim, probes=probes,
@@ -176,8 +213,7 @@ def main():
         mean_counts = np.asarray(res.counts, np.float64)
         dropped = int(np.asarray(res.dropped))
         raster = res.raster
-        stats = "".join(f" {k}={int(np.asarray(v))}"
-                        for k, v in res.stats.items())
+        stats = _fmt_stats(res.stats)
         print(f"[simulate] 1 trial x {t_steps} supervised steps "
               f"(K={args.chunk_steps or t_steps}) in {time.time()-t0:.2f}s "
               f"(dropped={dropped}{stats})")

@@ -1,0 +1,148 @@
+"""Per-signature compile-cache instrumentation for jitted entry points.
+
+``simulate()`` is one jitted scan per (engine, stimulus, config, probes,
+t_steps) signature, and the ROADMAP explicitly asks for the cache's hit
+rates to be surfaced.  :class:`InstrumentedJit` wraps a ``jax.jit``-ed
+function and, when a metrics registry is in reach (ambient telemetry
+session, or one bound at construction — the serving engine's always-on
+accounting), keys calls by their abstract signature exactly as jit does
+(static argnum values + dynamic-leaf treedef/shape/dtype/weak-type) and:
+
+* counts hits and misses (``compile_cache.hits`` / ``.misses``, plus
+  per-function counters);
+* on each miss, lowers and compiles ahead-of-time with the trace and
+  compile phases timed separately (``span("compile")``), captures the
+  compiled program's ``cost_analysis()`` FLOPs/bytes once per
+  signature, emits a ``compile`` event, and caches the executable;
+* dispatches through the cached executable — the same deterministic
+  compilation the plain jit call would run, so results are
+  bit-identical instrumented or not (pinned in tests/test_obs.py).
+
+Without a registry the call passes straight through to the wrapped jit
+function: zero overhead, zero behavior change.  If AOT lowering is
+unsupported for some signature (e.g. an exotic transform), the wrapper
+falls back to the plain call permanently for that signature and records
+the miss with ``fallback=True`` — instrumentation must never take down
+a run.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import time
+from typing import Optional
+
+import numpy as np
+
+from .metrics import MetricsRegistry
+from .trace import active, span
+
+#: sentinel: this signature routes through the plain jit call forever
+_PLAIN = object()
+
+
+def _cost_analysis(compiled) -> tuple[Optional[float], Optional[float]]:
+    """(flops, bytes accessed) from the compiled program, when the
+    backend reports them (CPU does; some backends return nothing)."""
+    try:
+        cost = compiled.cost_analysis()
+    except Exception:  # noqa: BLE001 — optional metadata only
+        return None, None
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else None
+    if not isinstance(cost, dict):
+        return None, None
+    flops = cost.get("flops")
+    nbytes = cost.get("bytes accessed")
+    return (float(flops) if flops is not None else None,
+            float(nbytes) if nbytes is not None else None)
+
+
+class InstrumentedJit:
+    """Wrap a ``jax.jit``-ed function with compile-cache metrics.
+
+    ``static_argnums`` must match the wrapped jit's (the wrapper keys
+    and drops them exactly as jit does).  ``registry`` binds always-on
+    accounting; otherwise the ambient session's registry is used when
+    one is active.
+    """
+
+    def __init__(self, fn, name: str, static_argnums=(),
+                 registry: Optional[MetricsRegistry] = None):
+        self.fn = fn
+        self.name = name
+        self.registry = registry
+        self._static = frozenset(static_argnums)
+        self._cache: dict = {}
+
+    # -- signature keying (mirrors jit's cache key) ------------------------
+
+    def _signature(self, args) -> tuple:
+        import jax
+        parts = []
+        for i, a in enumerate(args):
+            if i in self._static:
+                parts.append(("s", a))
+            else:
+                leaves, treedef = jax.tree_util.tree_flatten(a)
+                parts.append(("d", treedef, tuple(
+                    (np.shape(leaf),
+                     str(getattr(leaf, "dtype", type(leaf).__name__)),
+                     bool(getattr(leaf, "weak_type", False)))
+                    for leaf in leaves)))
+        return tuple(parts)
+
+    @staticmethod
+    def _sig_id(key) -> str:
+        return hashlib.sha256(repr(key).encode()).hexdigest()[:12]
+
+    # -- dispatch ----------------------------------------------------------
+
+    def _compile(self, tele, reg: MetricsRegistry, key, args):
+        sig = self._sig_id(key)
+        try:
+            with span("compile", fn=self.name, signature=sig):
+                t0 = time.monotonic()
+                lowered = self.fn.lower(*args)
+                t1 = time.monotonic()
+                compiled = lowered.compile()
+                t2 = time.monotonic()
+            flops, nbytes = _cost_analysis(compiled)
+            trace_s, compile_s = t1 - t0, t2 - t1
+            entry = compiled
+        except Exception:  # noqa: BLE001 — fall back to the plain call
+            flops = nbytes = None
+            trace_s = compile_s = 0.0
+            entry = _PLAIN
+        self._cache[key] = entry
+        reg.record_compile(self.name, sig, trace_s, compile_s, flops,
+                           nbytes, fallback=entry is _PLAIN)
+        if tele is not None:
+            tele.emit("compile", fn=self.name, signature=sig,
+                      trace_s=round(trace_s, 6),
+                      compile_s=round(compile_s, 6), flops=flops,
+                      bytes_accessed=nbytes, fallback=entry is _PLAIN)
+        return entry
+
+    def __call__(self, *args):
+        tele = active()
+        reg = self.registry if self.registry is not None else (
+            tele.metrics if tele is not None else None)
+        if reg is None:
+            return self.fn(*args)
+        key = self._signature(args)
+        entry = self._cache.get(key)
+        if entry is None:
+            reg.inc("compile_cache.misses")
+            reg.inc(f"compile_cache.{self.name}.misses")
+            entry = self._compile(tele, reg, key, args)
+        else:
+            reg.inc("compile_cache.hits")
+            reg.inc(f"compile_cache.{self.name}.hits")
+        if entry is _PLAIN:
+            return self.fn(*args)
+        return entry(*(a for i, a in enumerate(args)
+                       if i not in self._static))
+
+
+__all__ = ["InstrumentedJit"]

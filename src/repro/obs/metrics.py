@@ -1,0 +1,97 @@
+"""Thread-safe metrics registry: counters, observations, compile records.
+
+One registry rides on each :class:`repro.obs.Telemetry` session (ambient
+instrumentation), and components with always-on accounting — the serving
+engine's admission/batching counters — own a registry directly.
+Everything is host-side Python; nothing here touches a device.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Optional
+
+
+class MetricsRegistry:
+    """Counters (``inc``), observations (``observe``: count/total/min/max
+    per key — phase wall-times use these), and per-signature compile
+    records (:meth:`record_compile` / :meth:`compile_snapshot`)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._counters: dict[str, float] = {}
+        self._observations: dict[str, dict] = {}
+        self._compiles: list[dict] = []
+
+    # -- counters ----------------------------------------------------------
+
+    def inc(self, name: str, value: float = 1) -> None:
+        with self._lock:
+            self._counters[name] = self._counters.get(name, 0) + value
+
+    def get(self, name: str, default: float = 0) -> float:
+        with self._lock:
+            return self._counters.get(name, default)
+
+    # -- observations ------------------------------------------------------
+
+    def observe(self, name: str, value: float) -> None:
+        with self._lock:
+            o = self._observations.setdefault(
+                name, {"count": 0, "total": 0.0, "min": None, "max": None})
+            o["count"] += 1
+            o["total"] += value
+            o["min"] = value if o["min"] is None else min(o["min"], value)
+            o["max"] = value if o["max"] is None else max(o["max"], value)
+
+    # -- compile-cache records ---------------------------------------------
+
+    def record_compile(self, fn: str, signature: str, trace_s: float,
+                       compile_s: float, flops: Optional[float],
+                       bytes_accessed: Optional[float],
+                       fallback: bool = False) -> None:
+        """One record per compile-cache *miss* (captured once per
+        signature by :class:`repro.obs.InstrumentedJit`)."""
+        with self._lock:
+            self._compiles.append({
+                "fn": fn, "signature": signature,
+                "trace_s": trace_s, "compile_s": compile_s,
+                "flops": flops, "bytes_accessed": bytes_accessed,
+                "fallback": fallback,
+            })
+
+    # -- snapshots (all JSON-able plain dicts) -----------------------------
+
+    def counters(self) -> dict:
+        """Flat name -> number dict: counters plus flattened observation
+        aggregates (``<name>.count`` / ``<name>.total_s``)."""
+        with self._lock:
+            out = dict(self._counters)
+            for name, o in self._observations.items():
+                out[f"{name}.count"] = o["count"]
+                out[f"{name}.total_s"] = round(o["total"], 6)
+            return out
+
+    def observations(self) -> dict:
+        with self._lock:
+            return {k: dict(v) for k, v in self._observations.items()}
+
+    def compile_snapshot(self) -> dict:
+        """The ROADMAP's "surface hit rates" shape: hit/miss totals plus
+        the per-signature compile records (trace/compile wall,
+        cost_analysis FLOPs/bytes) — attached to ``SimResult.stats`` /
+        ``DistResult.stats`` when a telemetry session is active."""
+        with self._lock:
+            return {
+                "hits": int(self._counters.get("compile_cache.hits", 0)),
+                "misses": int(self._counters.get("compile_cache.misses", 0)),
+                "signatures": [dict(r) for r in self._compiles],
+            }
+
+    def snapshot(self) -> dict:
+        return {"counters": self.counters(),
+                "observations": self.observations(),
+                "compile_cache": self.compile_snapshot()}
+
+
+__all__ = ["MetricsRegistry"]

@@ -1,0 +1,26 @@
+"""``jax.profiler.trace`` gating for the launcher's ``--profile DIR``.
+
+The telemetry layer answers "where did wall-clock go" at phase/chunk
+granularity; when that points at the compiled program itself, the next
+level down is the XLA profiler.  :func:`profile_trace` wraps a block in
+``jax.profiler.trace(dir)`` (TensorBoard-loadable trace files) and is a
+no-op when ``directory`` is falsy, so call sites can pass the CLI flag
+straight through.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+
+@contextlib.contextmanager
+def profile_trace(directory):
+    if not directory:
+        yield
+        return
+    import jax
+    with jax.profiler.trace(str(directory)):
+        yield
+
+
+__all__ = ["profile_trace"]

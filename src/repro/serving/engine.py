@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.models import decode_step, init_cache, prefill
 
 
@@ -47,10 +48,36 @@ class ServingEngine:
         self.cache = init_cache(cfg, B, L)
         self.pos = np.zeros(B, dtype=np.int64)          # per-slot write pos
         self.live: list[Optional[Request]] = [None] * B
-        self._decode = jax.jit(
-            lambda p, c, t, pos: decode_step(p, c, t, pos, cfg))
-        self._prefill1 = jax.jit(
-            lambda p, b: prefill(p, b, cfg, L))
+        # always-on accounting: the registry is bound at construction, so
+        # admission/decode counters and compile-cache hit rates accumulate
+        # with or without an ambient telemetry session (ROADMAP's
+        # "surface hit rates" for the serving loop)
+        self.metrics = obs.MetricsRegistry()
+        self._queue_depth = 0          # pending requests at last run() tick
+        self._decode = obs.InstrumentedJit(
+            jax.jit(lambda p, c, t, pos: decode_step(p, c, t, pos, cfg)),
+            "serving.decode", registry=self.metrics)
+        self._prefill1 = obs.InstrumentedJit(
+            jax.jit(lambda p, b: prefill(p, b, cfg, L)),
+            "serving.prefill", registry=self.metrics)
+
+    def stats(self) -> dict:
+        """Point-in-time snapshot: queue/slot occupancy plus the
+        cumulative admission, decode, and compile-cache counters."""
+        c = self.metrics.counters()
+        live = sum(r is not None for r in self.live)
+        cache = self.metrics.compile_snapshot()
+        return {
+            "slots_live": live,
+            "slots_free": self.sc.batch_slots - live,
+            "queue_depth": self._queue_depth,
+            "admitted": int(c.get("serving.admitted", 0)),
+            "rejected": int(c.get("serving.rejected", 0)),
+            "decode_steps": int(c.get("serving.decode_steps", 0)),
+            "tokens_generated": int(c.get("serving.tokens", 0)),
+            "compile_cache": {"hits": cache["hits"],
+                              "misses": cache["misses"]},
+        }
 
     # -- slot management ---------------------------------------------------
 
@@ -63,7 +90,9 @@ class ServingEngine:
     def add_request(self, req: Request) -> bool:
         slot = self._free_slot()
         if slot is None:
+            self.metrics.inc("serving.rejected")
             return False
+        self.metrics.inc("serving.admitted")
         # prefill the single request, then scatter its cache into the slot
         batch = {"tokens": jnp.asarray(req.prompt)[None]}
         logits, rcache = self._prefill1(self.params, batch)
@@ -100,10 +129,12 @@ class ServingEngine:
         pos = jnp.asarray(self.pos.astype(np.int32))
         logits, self.cache = self._decode(self.params, self.cache,
                                           jnp.asarray(toks), pos)
+        self.metrics.inc("serving.decode_steps")
         nxt = np.asarray(jnp.argmax(logits, -1))
         for i, r in enumerate(self.live):
             if r is None:
                 continue
+            self.metrics.inc("serving.tokens")
             r.out.append(int(nxt[i]))
             self.pos[i] += 1
             if (len(r.out) >= r.max_new or
@@ -120,6 +151,7 @@ class ServingEngine:
         while (pending or any(self.live)) and steps < max_steps:
             while pending and self._free_slot() is not None:
                 self.add_request(pending.pop(0))
+            self._queue_depth = len(pending)
             self.step()
             done.extend(r for r in requests if r.done)
             for r in done:

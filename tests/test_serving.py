@@ -48,6 +48,34 @@ def test_engine_serves_more_requests_than_slots(setup):
     assert all(len(r.out) == 6 for r in done)
 
 
+def test_engine_stats_counters(setup):
+    """Admission/decode accounting flows through the always-on metrics
+    registry (no ambient telemetry session needed) and compile-cache
+    hits accumulate across the repeated prefill/decode signatures."""
+    cfg, params = setup
+    eng = ServingEngine(params, cfg, ServeConfig(batch_slots=2, max_len=64))
+    reqs = [Request(rid=i, prompt=(np.arange(4) % cfg.vocab), max_new=3)
+            for i in range(5)]
+    # overfill by hand: admissions beyond the 2 slots are rejected
+    admitted = [eng.add_request(r) for r in reqs]
+    assert admitted == [True, True, False, False, False]
+    s = eng.stats()
+    assert s["admitted"] == 2 and s["rejected"] == 3
+    assert s["slots_live"] == 2 and s["slots_free"] == 0
+    # the run loop drains everything; counters keep accumulating
+    done = eng.run([r for r, ok in zip(reqs, admitted) if not ok])
+    assert len(done) == 3
+    assert all(r.done for r in reqs)   # pre-admitted pair finished too
+    s = eng.stats()
+    assert s["admitted"] == 5
+    assert s["decode_steps"] > 0
+    assert s["tokens_generated"] >= 5 * 2    # max_new=3, first via prefill
+    assert s["slots_live"] == 0 and s["queue_depth"] == 0
+    # 5 prefills + many decode steps over 2 signatures -> mostly hits
+    cc = s["compile_cache"]
+    assert cc["misses"] >= 2 and cc["hits"] > cc["misses"]
+
+
 def test_engine_interleaved_lengths_are_isolated(setup):
     """Two concurrent requests with different prompt lengths produce the
     same tokens as when served alone (slot isolation under per-slot pos)."""
