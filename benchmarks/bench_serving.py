@@ -1,0 +1,112 @@
+"""Serving-layer throughput under a fault-injected workload.
+
+    PYTHONPATH=src python -m benchmarks.bench_serving --json BENCH_serving.json
+
+Drives a mixed multi-tenant workload — two scenario tiers, distinct
+seeds, one crash-injected request (the ``faulty`` exchange wrapper's
+host hook) and one poisoned (NaN-stimulus) request — through
+:class:`repro.serving.SimServer` and records what the serving PR is
+accountable for: concurrent scenario-trials/sec (completed requests per
+wall second, each request being one full T-step trial) and the
+completed-request latency p50/p99, plus the retry/shed/quarantine
+accounting.  Also runs as a module of ``benchmarks.run`` (rows land in
+the shared ``--json`` payload under ``bench_serving``).
+"""
+
+from __future__ import annotations
+
+import time
+
+from .common import row
+
+# (n, synapses, t_steps, requests, max_batch)
+SMOKE_SCALE = (400, 8_000, 50, 8, 4)
+BENCH_SCALE = (2_000, 60_000, 200, 16, 8)
+FULL_SCALE = (20_000, 600_000, 500, 24, 8)
+
+
+def _workload(t_steps: int, requests: int):
+    from repro.core.exchange import FaultSpec, configure_faulty
+    from repro.exp import ProbeSpec
+    from repro.serving import SimRequest
+
+    reqs = [SimRequest(scenario="sugar_feeding" if i % 2 else "step_response",
+                       t_steps=t_steps, seed=i,
+                       probes=ProbeSpec(pop_rate=True))
+            for i in range(requests)]
+    # one transient crash (retried with backoff) + one poison (quarantined
+    # after two health failures): the measured number is throughput under
+    # supervision, not a fair-weather spikes/sec
+    spec = FaultSpec(partition=0, fail_at=(t_steps // 2,))
+    reqs[0].fault_hook = configure_faulty("event", spec).host_supervise
+    reqs.append(SimRequest(scenario="step_response", t_steps=t_steps,
+                           seed=len(reqs), params={"amp": float("nan")}))
+    return reqs
+
+
+def run(full: bool = False, smoke: bool = False):
+    from repro.core import SimConfig, synthetic_flywire_cached
+    from repro.core.health import BackoffPolicy, HealthConfig
+    from repro.serving import SimServeConfig, SimServer
+
+    n, syn, t_steps, requests, max_batch = (
+        FULL_SCALE if full else SMOKE_SCALE if smoke else BENCH_SCALE)
+    c = synthetic_flywire_cached(n=n, seed=0, target_synapses=syn)
+    cfg = SimConfig(engine="csr", health=HealthConfig())
+    serve = SimServeConfig(
+        max_batch=max_batch, max_queue=2 * requests,
+        chunk_steps=max(t_steps // 4, 1),
+        backoff=BackoffPolicy(base_s=0.01, cap_s=0.5, jitter=0.0))
+    server = SimServer(c, cfg, serve)
+    reqs = _workload(t_steps, requests)
+
+    t0 = time.perf_counter()
+    done = server.run(reqs)
+    wall = time.perf_counter() - t0
+
+    s = server.stats()
+    assert all(r.terminal for r in done), "non-terminal request in bench"
+    rows = [
+        row("serving.requests", s["submitted"],
+            f"n={n} t_steps={t_steps} max_batch={max_batch}"),
+        row("serving.completed", s["completed"],
+            f"rejected={s['rejected']} quarantined={s['quarantined']}"),
+        row("serving.trials_per_s", round(s["completed"] / wall, 4),
+            f"wall={wall:.2f}s concurrent fault-injected workload"),
+        row("serving.steps_per_s",
+            round(s["completed"] * t_steps / wall, 1),
+            "completed trial-steps per wall second"),
+        row("serving.latency_p50_s", round(s["latency_p50_s"] or 0.0, 4),
+            "completed-request submit->finish"),
+        row("serving.latency_p99_s", round(s["latency_p99_s"] or 0.0, 4),
+            "completed-request submit->finish"),
+        row("serving.retries", s["retries"],
+            f"escalations={s['escalations']}"),
+        row("serving.shed", s["shed"], f"deadline={s['deadline_expired']}"),
+        row("serving.quarantined", s["quarantined"], "poison isolated"),
+        row("serving.batches", s["batches"],
+            f"chunks={s['chunks']} (signature-packed vmap scans)"),
+    ]
+    return rows
+
+
+def main() -> None:
+    import argparse
+
+    from .common import write_json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", default="", metavar="PATH")
+    args = ap.parse_args()
+    print("name,value,derived")
+    rows = run(full=args.full, smoke=args.smoke)
+    if args.json:
+        write_json(args.json, {"bench_serving": rows}, full=args.full,
+                   smoke=args.smoke)
+        print(f"# wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

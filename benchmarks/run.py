@@ -27,6 +27,7 @@ MODULES = [
     "bench_partition",          # Figs 8-10, chip counts
     "bench_parity",             # Figs 6/12/13/14/15
     "bench_activity_scaling",   # Table 1, Figs 16-17, engine_step.* rows
+    "bench_serving",            # serving-layer throughput + latency
 ]
 
 

@@ -26,8 +26,8 @@ from .engines import (Capacity, DeliveryEngine, auto_capacity,
 from .exchange import (ExchangeFault, ExchangeScheme, FaultSpec,
                        available_schemes, configure_faulty, get_scheme,
                        register_scheme)
-from .health import (HealthConfig, SimCheckpointer, SimulationHealthError,
-                     run_chunked, run_resilient)
+from .health import (BackoffPolicy, HealthConfig, SimCheckpointer,
+                     SimulationHealthError, run_chunked, run_resilient)
 from .validate import (ParityStats, mean_rates_over_trials, parity,
                        raster_to_times)
 

@@ -41,7 +41,9 @@ Fault injection for exercising all of this without hardware lives in
 from __future__ import annotations
 
 import dataclasses
+import random
 import re
+import time
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax
@@ -103,6 +105,35 @@ class SimulationHealthError(RuntimeError):
 
 #: kinds that escalation can fix (everything else is poison)
 RECOVERABLE_KINDS = ("drop_rate",)
+
+
+@dataclasses.dataclass(frozen=True)
+class BackoffPolicy:
+    """Jittered exponential backoff for supervision retry loops.
+
+    A crash-looping run must not hot-spin: every restart or escalation
+    waits ``base_s * factor**(attempt-1)`` seconds, capped at ``cap_s``,
+    with a multiplicative ±``jitter`` fraction so a fleet of supervised
+    runs restarting off the same incident doesn't re-stampede in sync.
+    Consumed by :func:`run_resilient` and the serving layer
+    (:mod:`repro.serving.sim`); the chosen delay is surfaced on the
+    corresponding telemetry event (``backoff_s``).
+    """
+
+    base_s: float = 0.1
+    factor: float = 2.0
+    cap_s: float = 30.0
+    jitter: float = 0.25     # fraction of the delay, uniform in [-j, +j]
+
+    def delay(self, attempt: int, rng=None) -> float:
+        """Delay in seconds before retry number ``attempt`` (1-based).
+        ``rng`` is anything with ``.random()`` (default: the ``random``
+        module) — pass a seeded ``random.Random`` for determinism."""
+        d = min(self.base_s * self.factor ** max(0, attempt - 1), self.cap_s)
+        if self.jitter:
+            u = (rng if rng is not None else random).random()
+            d *= 1.0 + self.jitter * (2.0 * u - 1.0)
+        return max(0.0, d)
 
 
 # --------------------------------------------------------------------------
@@ -174,6 +205,31 @@ def carry_counters(carry) -> dict:
     sums = jax.device_get(_sum_leaves(
         {"spikes": carry.counts, "dropped": carry.dropped, **carry.stats}))
     return {k: int(v) for k, v in sums.items()}
+
+
+@jax.jit
+def _sum_lane_leaves(tree):
+    return jax.tree_util.tree_map(
+        lambda v: jnp.asarray(v).reshape(jnp.asarray(v).shape[0], -1)
+        .sum(axis=1), tree)
+
+
+def lane_snapshots(step: int, carry) -> list[HealthSnapshot]:
+    """Per-lane :class:`HealthSnapshot` of a trial-batched carry (leaves
+    ``[B, ...]``): lane ``b``'s counters reduce over everything *except*
+    the leading batch axis, so a poisoned or starved request inside a
+    packed batch is attributable to exactly one lane.  One jitted
+    dispatch + one transfer for the whole batch — the serving layer's
+    per-request health check at every chunk boundary."""
+    sums = jax.device_get(_sum_lane_leaves(
+        {"spikes": carry.counts, "dropped": carry.dropped, **carry.stats}))
+    return [HealthSnapshot(
+        step=int(step),
+        spikes=int(sums["spikes"][b]),
+        dropped=int(sums["dropped"][b]),
+        nonfinite=int(sums["h_nonfinite"][b]) if "h_nonfinite" in sums else 0,
+        saturated=int(sums["h_saturated"][b]) if "h_saturated" in sums else 0,
+    ) for b in range(len(sums["spikes"]))]
 
 
 def snapshot(step: int, carry) -> HealthSnapshot:
@@ -387,7 +443,10 @@ def run_resilient(run_fn: Callable[[Optional[int], Optional[CapacityConfig]],
                   checkpoint_dir: Optional[str] = None,
                   max_restarts: int = 3,
                   capacity: Optional[CapacityConfig] = None,
-                  escalate=None, max_escalations: int = 4):
+                  escalate=None, max_escalations: int = 4,
+                  backoff: Optional[BackoffPolicy] = BackoffPolicy(),
+                  sleep: Callable[[float], None] = time.sleep,
+                  rng=None):
     """Supervise ``run_fn(resume_step, capacity)`` to completion.
 
     Generalizes :func:`repro.train.fault.run_with_recovery`: the resume
@@ -408,10 +467,17 @@ def run_resilient(run_fn: Callable[[Optional[int], Optional[CapacityConfig]],
     * **poison** (``nonfinite`` / ``saturated`` / ``rate_envelope``):
       deterministic corruption — re-raise immediately.
 
+    Every retry waits out ``backoff.delay(attempt)`` first (jittered
+    exponential, capped — see :class:`BackoffPolicy`; ``backoff=None``
+    restores the immediate-retry behaviour), so a crash-looping run
+    never hot-spins the host or re-stampedes in sync with its neighbors.
+    ``sleep`` / ``rng`` exist for tests.
+
     With a telemetry session active, every supervision decision is
     emitted: an ``escalation`` event per capacity escalation, a
-    ``restart`` event per crash recovery (``health`` breach events come
-    from :func:`run_chunked` itself).
+    ``restart`` event per crash recovery — each carrying the applied
+    ``backoff_s`` (``health`` breach events come from
+    :func:`run_chunked` itself).
     """
     from repro.train.checkpoint import latest_step
     from .capacity import escalate_capacity
@@ -423,6 +489,14 @@ def run_resilient(run_fn: Callable[[Optional[int], Optional[CapacityConfig]],
 
     def _latest():
         return latest_step(checkpoint_dir) if checkpoint_dir else None
+
+    def _wait(attempt: int) -> float:
+        if backoff is None:
+            return 0.0
+        d = backoff.delay(attempt, rng)
+        if d > 0:
+            sleep(d)
+        return round(d, 6)
 
     with obs.span("run_resilient"):
         while True:
@@ -438,20 +512,25 @@ def run_resilient(run_fn: Callable[[Optional[int], Optional[CapacityConfig]],
                 if capacity is None:
                     raise   # escalation policy declined — surface the breach
                 resume = _latest()
+                waited = _wait(escalations)
                 if tele is not None:
                     tele.emit("escalation", attempt=escalations,
-                              resume_step=resume, kind=e.kind)
+                              resume_step=resume, kind=e.kind,
+                              backoff_s=waited)
             except RuntimeError as e:
                 restarts += 1
                 if restarts > max_restarts:
                     raise
                 resume = _latest()
+                waited = _wait(restarts)
                 if tele is not None:
                     tele.emit("restart", attempt=restarts,
-                              resume_step=resume, error=type(e).__name__)
+                              resume_step=resume, error=type(e).__name__,
+                              backoff_s=waited)
 
 
-__all__ = ["HealthConfig", "HealthSnapshot", "RECOVERABLE_KINDS",
-           "SimCheckpointer", "SimulationHealthError", "carry_counters",
-           "check_chunk", "concat_records", "health_stats_init",
-           "health_step_stats", "run_chunked", "run_resilient", "snapshot"]
+__all__ = ["BackoffPolicy", "HealthConfig", "HealthSnapshot",
+           "RECOVERABLE_KINDS", "SimCheckpointer", "SimulationHealthError",
+           "carry_counters", "check_chunk", "concat_records",
+           "health_stats_init", "health_step_stats", "lane_snapshots",
+           "run_chunked", "run_resilient", "snapshot"]

@@ -12,7 +12,8 @@ from .scenarios import (Scenario, available_scenarios, build_scenario,
 from .stimulus import (SILENT, Background, Compose, PoissonDrive, PulseTrain,
                        RampDrive, SkipKey, StepCurrent, StimDrive, Stimulus,
                        legacy_stimulus, per_neuron, shard_stimulus)
-from .trials import DistTrialResult, TrialResult, run_dist_trials, run_trials
+from .trials import (DistTrialResult, TrialResult, run_dist_trials,
+                     run_trials, trial_carry)
 
 __all__ = [
     "NO_PROBES", "ProbeSpec",
@@ -22,4 +23,5 @@ __all__ = [
     "RampDrive", "SkipKey", "StepCurrent", "StimDrive", "Stimulus",
     "legacy_stimulus", "per_neuron", "shard_stimulus",
     "DistTrialResult", "TrialResult", "run_dist_trials", "run_trials",
+    "trial_carry",
 ]

@@ -23,6 +23,7 @@ from repro.core.connectome import Connectome
 from repro.core.engine import (SimConfig, _init_carry, _resolve_probes,
                                _resolve_stimulus, _run_scan_trials,
                                build_synapses)
+from repro.core.health import run_chunked
 from repro.core.neuron import LIFState
 
 
@@ -34,6 +35,22 @@ def _seed_tuple(seeds) -> tuple:
     if not seeds:
         raise ValueError("need at least one seed")
     return seeds
+
+
+def trial_carry(n: int, cfg: SimConfig, stimulus, seeds):
+    """Trial-batched scan carry: the single-run carry broadcast over a
+    leading seed axis, with one PRNG stream per trial — exactly what
+    ``simulate(..., seed=s)`` initializes, stacked.  Returns
+    ``(carry, seeds)`` with ``seeds`` normalized to a tuple.  Shared by
+    :func:`run_trials` and the serving layer's request batching
+    (:mod:`repro.serving.sim`), which packs independent requests into
+    the same vmapped scan."""
+    seeds = _seed_tuple(seeds)
+    tmpl = _init_carry(n, cfg, stimulus, 0)
+    keys = jnp.stack([jax.random.PRNGKey(s) for s in seeds])
+    carry = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (len(seeds),) + x.shape).copy(), tmpl)
+    return carry._replace(key=keys), seeds
 
 
 class TrialResult(NamedTuple):
@@ -61,6 +78,7 @@ def run_trials(
     syn: Any | None = None,
     stimulus: Any | None = None,
     probes: Any | None = None,
+    chunk_steps: int | None = None,
 ) -> TrialResult:
     """Run one trial per seed as a single vmapped, jitted scan.
 
@@ -68,23 +86,33 @@ def run_trials(
     sequence.  Synaptic state and the stimulus are shared (broadcast)
     across trials; each trial gets its own PRNG stream, exactly as
     ``simulate(..., seed=s)`` would.
+
+    ``chunk_steps=K`` supervises the batch the same way ``simulate()``
+    does (:func:`repro.core.health.run_chunked`): ceil(T/K) reuses of one
+    compiled K-step program, bit-identical to the monolithic scan, with
+    ``cfg.health`` thresholds checked at chunk boundaries against the
+    counters summed over the whole batch (per-lane attribution is the
+    serving layer's job — :mod:`repro.serving.sim`).
     """
-    seeds = _seed_tuple(seeds)
     n = c.n
     if syn is None:
         syn = build_synapses(c, cfg)
     stimulus = _resolve_stimulus(cfg, n, sugar_neurons, stimulus)
     probes = _resolve_probes(cfg, probes)
+    carry, seeds = trial_carry(n, cfg, stimulus, seeds)
 
-    tmpl = _init_carry(n, cfg, stimulus, 0)
-    keys = jnp.stack([jax.random.PRNGKey(s) for s in seeds])
-    B = len(seeds)
-    carry = jax.tree.map(
-        lambda x: jnp.broadcast_to(x, (B,) + x.shape).copy(), tmpl)
-    carry = carry._replace(key=keys)
-
-    carry, records = _run_scan_trials(syn, carry, stimulus, cfg, probes,
-                                      t_steps, n)
+    if chunk_steps:
+        def run_chunk(cy, s, k):
+            return _run_scan_trials(syn, cy, stimulus, cfg, probes, k, n,
+                                    jnp.int32(s))
+        # records are [B, T, ...] on the batched path -> time axis 1; the
+        # rate envelope normalizes by the batch-summed neuron count
+        carry, records = run_chunked(
+            run_chunk, carry, t_steps, chunk_steps, time_axis=1,
+            health=cfg.health, n=n * len(seeds), dt_ms=cfg.params.dt)
+    else:
+        carry, records = _run_scan_trials(syn, carry, stimulus, cfg, probes,
+                                          t_steps, n)
     return TrialResult(counts=carry.counts, dropped=carry.dropped,
                        state=carry.lif, records=records, seeds=seeds)
 
@@ -140,4 +168,5 @@ def run_dist_trials(
                            seeds=seeds)
 
 
-__all__ = ["DistTrialResult", "TrialResult", "run_dist_trials", "run_trials"]
+__all__ = ["DistTrialResult", "TrialResult", "run_dist_trials", "run_trials",
+           "trial_carry"]

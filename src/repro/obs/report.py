@@ -13,7 +13,9 @@ simulation or a finished run):
 * the compile-cache table (per-signature trace/compile wall,
   cost_analysis FLOPs/bytes, hit/miss totals);
 * resilience events (health breaches, checkpoints, restarts,
-  escalations), when any occurred.
+  escalations), when any occurred;
+* serving traffic (``serve_*`` events): terminal-status counts,
+  completed-request latency p50/p99, shed/retry/quarantine incidents.
 
 Everything is plain text, zero dependencies; exit code 1 when the
 stream contains no events.
@@ -134,6 +136,42 @@ def summarize(events: list[dict]) -> str:
                     for c in compiles]
             out.append(_table(rows, ["fn", "signature", "trace", "compile",
                                      "flops", "bytes", ""]))
+
+    # -- serving -----------------------------------------------------------
+    req_ends = _by_type(events, "serve_request_end")
+    if req_ends:
+        out.append("")
+        statuses: dict[str, int] = {}
+        for e in req_ends:
+            statuses[e["status"]] = statuses.get(e["status"], 0) + 1
+        out.append("serving: " + "  ".join(
+            f"{k}={v}" for k, v in sorted(statuses.items())))
+        lat = sorted(e["wall_s"] for e in req_ends
+                     if e["status"] == "completed")
+        if lat:
+            p = lambda q: lat[min(len(lat) - 1,    # noqa: E731
+                                  int(q * (len(lat) - 1) + 0.5))]
+            out.append(f"request latency: p50={p(0.5):.3f}s "
+                       f"p99={p(0.99):.3f}s over {len(lat)} completed")
+        reasons: dict[str, int] = {}
+        for e in req_ends:
+            if e.get("reason"):
+                reasons[e["reason"]] = reasons.get(e["reason"], 0) + 1
+        if reasons:
+            out.append("terminal reasons: " + "  ".join(
+                f"{k}={v}" for k, v in sorted(reasons.items())))
+        serve_incidents = [e for e in events if e.get("type") in
+                           ("serve_shed", "serve_retry", "serve_quarantine",
+                            "serve_deadline", "serve_degrade")]
+        for e in serve_incidents:
+            kind = e["type"].removeprefix("serve_")
+            who = (f"rid={e['rid']}" if "rid" in e
+                   else f"rids={e.get('rids')}")
+            detail = e.get("reason") or e.get("error") or e.get("what") or ""
+            out.append(f"  t={e['t']:.3f}s {kind} {who}"
+                       + (f" ({detail})" if detail else "")
+                       + (f" backoff={e['backoff_s']:.3f}s"
+                          if "backoff_s" in e else ""))
 
     # -- resilience events -------------------------------------------------
     ckpts = _by_type(events, "checkpoint")

@@ -1,3 +1,23 @@
-from .engine import ServeConfig, ServingEngine, Request
+"""Serving layer: production-shaped front ends over the batched compute
+cores.
 
-__all__ = ["ServeConfig", "ServingEngine", "Request"]
+Two engines share the slot/batching vocabulary:
+
+* :mod:`repro.serving.engine` — the LM serving loop (continuous batching
+  over prefill/decode, slot-recycled KV cache).
+* :mod:`repro.serving.sim` — simulation-as-a-service for the connectome
+  simulator: admission control, batching by compile signature onto one
+  vmapped chunked scan, per-lane health attribution, retry/backoff,
+  poison quarantine, load shedding, graceful degradation.  See
+  ``docs/serving.md``.
+"""
+
+from .engine import Request, ServeConfig, ServingEngine
+from .sim import (COMPLETED, QUARANTINED, QUEUED, REJECTED, TERMINAL,
+                  SimRequest, SimServeConfig, SimServer)
+
+__all__ = [
+    "Request", "ServeConfig", "ServingEngine",
+    "COMPLETED", "QUARANTINED", "QUEUED", "REJECTED", "TERMINAL",
+    "SimRequest", "SimServeConfig", "SimServer",
+]

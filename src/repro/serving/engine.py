@@ -30,6 +30,7 @@ class Request:
     max_new: int = 32
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    truncated: bool = False       # run() hit max_steps with this in flight
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,7 +47,9 @@ class ServingEngine:
         self.sc = serve_cfg
         B, L = serve_cfg.batch_slots, serve_cfg.max_len
         self.cache = init_cache(cfg, B, L)
-        self.pos = np.zeros(B, dtype=np.int64)          # per-slot write pos
+        # int32 from the start: decode_step wants int32 positions, so an
+        # int64 store would force a downcast copy on every step()
+        self.pos = np.zeros(B, dtype=np.int32)          # per-slot write pos
         self.live: list[Optional[Request]] = [None] * B
         # always-on accounting: the registry is bound at construction, so
         # admission/decode counters and compile-cache hit rates accumulate
@@ -75,6 +78,7 @@ class ServingEngine:
             "rejected": int(c.get("serving.rejected", 0)),
             "decode_steps": int(c.get("serving.decode_steps", 0)),
             "tokens_generated": int(c.get("serving.tokens", 0)),
+            "truncated": int(c.get("serving.truncated", 0)),
             "compile_cache": {"hits": cache["hits"],
                               "misses": cache["misses"]},
         }
@@ -116,21 +120,23 @@ class ServingEngine:
 
     # -- decode ------------------------------------------------------------
 
-    def step(self):
-        """One joint decode step across all live slots."""
+    def step(self) -> list[Request]:
+        """One joint decode step across all live slots; returns the
+        requests whose slot finished (EOS / length limit) this step."""
         if not any(r is not None for r in self.live):
-            return
+            return []
         B = self.sc.batch_slots
         toks = np.zeros(B, dtype=np.int32)
         for i, r in enumerate(self.live):
             if r is not None:
                 toks[i] = r.out[-1]
         # per-slot positions: each live slot writes kv at its own pos
-        pos = jnp.asarray(self.pos.astype(np.int32))
         logits, self.cache = self._decode(self.params, self.cache,
-                                          jnp.asarray(toks), pos)
+                                          jnp.asarray(toks),
+                                          jnp.asarray(self.pos))
         self.metrics.inc("serving.decode_steps")
         nxt = np.asarray(jnp.argmax(logits, -1))
+        finished: list[Request] = []
         for i, r in enumerate(self.live):
             if r is None:
                 continue
@@ -142,23 +148,33 @@ class ServingEngine:
                     self.pos[i] >= self.sc.max_len - 1):
                 r.done = True
                 self.live[i] = None
+                finished.append(r)
+        return finished
 
     def run(self, requests: list[Request], max_steps: int = 10_000):
-        """Serve a workload to completion; returns the finished requests."""
+        """Serve a workload; returns ALL submitted requests in completion
+        order.  Per-slot completion is tracked from :meth:`step`'s return
+        (O(finished) per step, not an O(n²) rescan of the workload), and a
+        request still in flight or still queued when ``max_steps`` runs
+        out comes back with ``truncated=True`` instead of silently
+        vanishing — callers can always account for every submission."""
         pending = list(requests)
         done: list[Request] = []
         steps = 0
-        while (pending or any(self.live)) and steps < max_steps:
+        while (pending or any(r is not None for r in self.live)) \
+                and steps < max_steps:
             while pending and self._free_slot() is not None:
                 self.add_request(pending.pop(0))
             self._queue_depth = len(pending)
-            self.step()
-            done.extend(r for r in requests if r.done)
-            for r in done:
-                if r in requests:
-                    requests.remove(r)
+            done.extend(self.step())
             steps += 1
-        return done
+        leftover = [r for r in self.live if r is not None] + pending
+        for r in leftover:
+            r.truncated = True
+            self.metrics.inc("serving.truncated")
+        self.live = [None] * self.sc.batch_slots
+        self._queue_depth = 0
+        return done + leftover
 
 
 def _batch_axis(slot_shape, one_shape, batch_slots) -> int:

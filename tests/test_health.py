@@ -11,19 +11,24 @@ to a lossless run bit-equal to an amply-provisioned reference; (e) an
 injected partition failure (``faulty`` exchange scheme) is detected and
 recovered bit-identically; (f) the checkpoint satellites — dtype-checked
 restore, joinable async saves — and the non-finite-masked parity
-statistic.
+statistic; (g) supervision backoff — jittered-exponential, capped delays
+between restarts/escalations, surfaced as ``backoff_s`` on the telemetry
+events, with ``backoff=None`` restoring immediate retry.
 """
 
 import dataclasses
+import random
 import warnings
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import obs
 from repro.core import (CapacityConfig, FaultSpec, HealthConfig, SimConfig,
                         SimulationHealthError, configure_faulty, parity,
                         run_resilient, simulate, synthetic_flywire)
+from repro.core.health import BackoffPolicy
 from repro.core.dcsr import build_dcsr
 from repro.core.distributed import DistConfig, simulate_distributed
 from repro.core.exchange.faulty import ExchangeFault
@@ -353,3 +358,90 @@ def test_parity_finite_behavior_unchanged():
     assert s.n_nonfinite == 0
     assert s.n_active == int(((a > 0.5) | (b > 0.5)).sum())
     assert s.rmse_hz < 0.5 and s.pearson_r > 0.99
+
+
+# --------------------------------------------------------------------------
+# (g) supervision backoff
+# --------------------------------------------------------------------------
+
+def test_backoff_policy_exponential_capped_deterministic():
+    p = BackoffPolicy(base_s=0.1, factor=2.0, cap_s=0.9, jitter=0.0)
+    assert [p.delay(a) for a in range(1, 6)] == [
+        pytest.approx(0.1), pytest.approx(0.2), pytest.approx(0.4),
+        pytest.approx(0.8), pytest.approx(0.9)]        # clamped at cap_s
+    # jitter widens around the nominal delay, deterministically per rng seed
+    j = BackoffPolicy(base_s=0.1, factor=2.0, cap_s=0.9, jitter=0.5)
+    got = [j.delay(2, rng=random.Random(7)) for _ in range(3)]
+    assert got[0] == got[1] == got[2]
+    assert 0.1 <= got[0] <= 0.3 and got[0] != pytest.approx(0.2)
+    assert j.delay(2, rng=random.Random(7)) != j.delay(2, rng=random.Random(8))
+
+
+def test_run_resilient_backoff_delays_and_events():
+    """Crash-looping runs wait out jittered-exponential delays between
+    restarts, and each restart/escalation event carries the applied
+    ``backoff_s`` so incident timelines show the supervisor's pacing."""
+    boom = [3]
+    waits, events = [], []
+
+    def attempt(resume, cap):
+        if boom[0]:
+            boom[0] -= 1
+            raise RuntimeError("transient")
+        return "ok"
+
+    with obs.telemetry(events.append, validate=True):
+        out = run_resilient(
+            attempt, max_restarts=3,
+            backoff=BackoffPolicy(base_s=0.05, factor=2.0, cap_s=0.08,
+                                  jitter=0.0),
+            sleep=waits.append)
+    assert out == "ok"
+    assert waits == [pytest.approx(0.05), pytest.approx(0.08),
+                     pytest.approx(0.08)]              # exponential, capped
+    restarts = [e for e in events if e["type"] == "restart"]
+    assert [r["attempt"] for r in restarts] == [1, 2, 3]
+    assert [r["backoff_s"] for r in restarts] == [
+        pytest.approx(0.05), pytest.approx(0.08), pytest.approx(0.08)]
+    assert all(r["error"] == "RuntimeError" for r in restarts)
+
+
+def test_run_resilient_backoff_none_is_immediate():
+    boom = [2]
+    waits = []
+
+    def attempt(resume, cap):
+        if boom[0]:
+            boom[0] -= 1
+            raise RuntimeError("transient")
+        return "ok"
+
+    assert run_resilient(attempt, backoff=None,
+                         sleep=waits.append) == "ok"
+    assert waits == []
+
+
+def test_run_resilient_escalation_event_carries_backoff(setup, tmp_path):
+    """Drop-rate escalation paces its retries through the same policy and
+    stamps the chosen delay on the ``escalation`` event."""
+    c, sugar, _ = setup
+    hc = HealthConfig(max_drop_rate=0.0)
+    tiny = CapacityConfig(spike_capacity=4, syn_budget=64)
+    waits, events = [], []
+
+    def attempt(resume, cap):
+        cfg = SimConfig(engine="event", capacity=cap or tiny, health=hc)
+        return _run(c, cfg, 80, sugar, chunk_steps=20)
+
+    with obs.telemetry(events.append, validate=True):
+        out = run_resilient(attempt, checkpoint_dir=str(tmp_path / "ck"),
+                            capacity=tiny, max_escalations=10,
+                            backoff=BackoffPolicy(base_s=0.01, factor=2.0,
+                                                  cap_s=0.02, jitter=0.0),
+                            sleep=waits.append)
+    assert int(out.dropped) == 0
+    esc = [e for e in events if e["type"] == "escalation"]
+    assert esc and all(e["kind"] == "drop_rate" for e in esc)
+    assert [e["backoff_s"] for e in esc] == [pytest.approx(w) for w in waits]
+    assert waits[0] == pytest.approx(0.01)
+    assert all(w <= 0.02 + 1e-9 for w in waits)

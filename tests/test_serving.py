@@ -62,9 +62,12 @@ def test_engine_stats_counters(setup):
     s = eng.stats()
     assert s["admitted"] == 2 and s["rejected"] == 3
     assert s["slots_live"] == 2 and s["slots_free"] == 0
-    # the run loop drains everything; counters keep accumulating
+    # the run loop drains everything; counters keep accumulating.  run()
+    # returns every request that finished during the call — including the
+    # pair admitted by hand above, which the old workload-rescan loop
+    # silently omitted.
     done = eng.run([r for r, ok in zip(reqs, admitted) if not ok])
-    assert len(done) == 3
+    assert len(done) == 5
     assert all(r.done for r in reqs)   # pre-admitted pair finished too
     s = eng.stats()
     assert s["admitted"] == 5
@@ -74,6 +77,53 @@ def test_engine_stats_counters(setup):
     # 5 prefills + many decode steps over 2 signatures -> mostly hits
     cc = s["compile_cache"]
     assert cc["misses"] >= 2 and cc["hits"] > cc["misses"]
+
+
+def test_engine_run_truncates_instead_of_dropping(setup):
+    """A request still in flight (or still queued) when run() hits
+    max_steps comes back marked ``truncated`` — never silently dropped —
+    and the engine is left clean (slots recycled, queue depth 0)."""
+    cfg, params = setup
+    eng = ServingEngine(params, cfg, ServeConfig(batch_slots=2, max_len=64))
+    reqs = [Request(rid=i, prompt=(np.arange(4) % cfg.vocab), max_new=50)
+            for i in range(4)]
+    done = eng.run(list(reqs), max_steps=3)
+    assert len(done) == 4                      # every submission accounted
+    assert {r.rid for r in done} == {0, 1, 2, 3}
+    assert sum(r.truncated for r in done) == 4   # nobody could finish in 3
+    assert not any(r.done for r in done)
+    s = eng.stats()
+    assert s["truncated"] == 4
+    assert s["slots_live"] == 0 and s["queue_depth"] == 0
+    # a fresh run completes and stays truncation-free
+    [ok] = eng.run([Request(rid=9, prompt=(np.arange(4) % cfg.vocab),
+                            max_new=3)])
+    assert ok.done and not ok.truncated
+
+
+def test_engine_run_returns_all_in_completion_order(setup):
+    """Mixed lengths: run() returns every request exactly once, finished
+    ones first in completion order, none re-scanned from the workload
+    list (the O(n^2) done-rescan bookkeeping bug)."""
+    cfg, params = setup
+    eng = ServingEngine(params, cfg, ServeConfig(batch_slots=2, max_len=64))
+    reqs = [Request(rid=i, prompt=(np.arange(4) % cfg.vocab),
+                    max_new=2 + 3 * i) for i in range(4)]
+    done = eng.run(list(reqs))
+    assert [r.rid for r in done] == sorted(
+        (r.rid for r in reqs), key=lambda i: reqs[i].max_new)
+    assert all(r.done and not r.truncated for r in done)
+    assert [len(r.out) for r in done] == sorted(r.max_new for r in reqs)
+
+
+def test_engine_pos_stays_int32(setup):
+    """Per-slot positions are stored int32 so step() feeds decode without
+    a per-call downcast copy."""
+    cfg, params = setup
+    eng = ServingEngine(params, cfg, ServeConfig(batch_slots=2, max_len=64))
+    assert eng.pos.dtype == np.int32
+    eng.run([Request(rid=0, prompt=(np.arange(4) % cfg.vocab), max_new=3)])
+    assert eng.pos.dtype == np.int32
 
 
 def test_engine_interleaved_lengths_are_isolated(setup):

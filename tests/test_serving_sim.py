@@ -1,0 +1,392 @@
+"""Simulation serving layer (PR 8 acceptance): admission, batching by
+compile signature, and the failure taxonomy.
+
+Pins: (a) a request packed into a vmapped batch gets a SimResult
+bit-identical to a solo ``simulate()`` run, on float32 AND Q19.12;
+(b) ``run_trials(chunk_steps=K)`` is bit-neutral (the substrate the
+server's chunk loop shares); (c) queue overflow sheds with
+``queue_full`` and the soft watermark degrades probes instead;
+(d) a deadline expires mid-run at a chunk boundary; (e) a poison request
+is isolated after its first health failure and quarantined with its
+:class:`SimulationHealthError` after the second, while its batch-mates
+complete; (f) a crash-looping request retries with backoff, is isolated
+from healthy traffic, and is finally rejected with the error attached;
+(g) a drop-rate breach escalates capacity for that batch tier only;
+(h) every emitted ``serve_*`` event validates against ``schema.json``
+and every submitted request reaches a terminal state.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import (CapacityConfig, HealthConfig, SimConfig, simulate,
+                        synthetic_flywire)
+from repro.core.exchange import ExchangeFault
+from repro.core.health import BackoffPolicy, SimulationHealthError
+from repro.exp import ProbeSpec, build_scenario, run_trials
+from repro.serving import (COMPLETED, QUARANTINED, REJECTED, SimRequest,
+                           SimServeConfig, SimServer)
+
+N, SYN, T = 300, 6_000, 60
+PROBES = ProbeSpec(raster=True, pop_rate=True)
+FAST = BackoffPolicy(base_s=0.0, jitter=0.0)     # no real sleeping in tests
+
+
+@pytest.fixture(scope="module")
+def c():
+    return synthetic_flywire(n=N, target_synapses=SYN, seed=0)
+
+
+def _server(c, *, cfg=None, clock=None, **serve_kw):
+    cfg = cfg if cfg is not None else SimConfig(engine="csr")
+    serve_kw.setdefault("backoff", FAST)
+    serve_kw.setdefault("chunk_steps", 20)
+    kw = {"clock": clock} if clock is not None else {}
+    return SimServer(c, cfg, SimServeConfig(**serve_kw),
+                     sleep=lambda s: None, **kw)
+
+
+def _req(seed, scenario="sugar_feeding", t=T, **kw):
+    kw.setdefault("probes", PROBES)
+    return SimRequest(scenario=scenario, t_steps=t, seed=seed, **kw)
+
+
+def _assert_bitwise(a, b):
+    assert np.array_equal(np.asarray(a.counts), np.asarray(b.counts))
+    for k in a.records:
+        assert np.array_equal(np.asarray(a.records[k]),
+                              np.asarray(b.records[k])), k
+    assert np.array_equal(np.asarray(a.state.v), np.asarray(b.state.v))
+    assert int(np.asarray(a.dropped).sum()) == int(np.asarray(b.dropped).sum())
+
+
+# --------------------------------------------------------------------------
+# (a) packed == solo, bitwise
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fx", [False, True], ids=["f32", "q19.12"])
+def test_batched_request_bit_identical_to_solo(c, fx):
+    """The core serving claim: batching by signature onto one vmapped
+    scan never changes a request's numbers — on both arithmetics."""
+    cfg = SimConfig(engine="csr", fixed_point=fx)
+    srv = _server(c, cfg=cfg, max_batch=4)
+    reqs = [_req(seed=s) for s in (3, 7, 11)]
+    done = srv.run(reqs)
+    assert [r.status for r in done] == [COMPLETED] * 3
+    assert srv.stats()["batches"] == 1      # one signature -> one vmap scan
+    stim = build_scenario("sugar_feeding", c, srv.cfg)
+    for r in reqs:
+        solo = simulate(c, srv.cfg, T, stimulus=stim, seed=r.seed,
+                        probes=PROBES)
+        _assert_bitwise(solo, r.result)
+
+
+def test_mixed_signatures_split_batches(c):
+    """Different params/probes -> different compile signatures -> never
+    packed together; a solo-flagged request is never batched at all."""
+    srv = _server(c, max_batch=8)
+    a = _req(seed=0)
+    b = _req(seed=1, scenario="step_response", probes=ProbeSpec(pop_rate=True))
+    lone = _req(seed=2)
+    lone.solo = True
+    srv.run([a, b, lone])
+    assert srv.stats()["batches"] == 3
+
+
+# --------------------------------------------------------------------------
+# (b) the chunked trial substrate is bit-neutral
+# --------------------------------------------------------------------------
+
+def test_run_trials_chunked_bit_identity(c):
+    cfg = SimConfig(engine="csr", health=HealthConfig())
+    stim = build_scenario("sugar_feeding", c, cfg)
+    ref = run_trials(c, cfg, 50, stimulus=stim, seeds=3, probes=PROBES)
+    chk = run_trials(c, cfg, 50, stimulus=stim, seeds=3, probes=PROBES,
+                     chunk_steps=16)                    # 16+16+16+2
+    assert np.array_equal(np.asarray(ref.counts), np.asarray(chk.counts))
+    for k in ref.records:
+        assert np.array_equal(np.asarray(ref.records[k]),
+                              np.asarray(chk.records[k])), k
+    assert np.array_equal(np.asarray(ref.state.v), np.asarray(chk.state.v))
+
+
+# --------------------------------------------------------------------------
+# (c) admission control: shed + degrade
+# --------------------------------------------------------------------------
+
+def test_queue_overflow_sheds_with_reason(c):
+    srv = _server(c, max_queue=2)
+    reqs = [_req(seed=s) for s in range(4)]
+    for r in reqs:
+        srv.submit(r)
+    assert [r.status for r in reqs] == ["queued", "queued",
+                                       REJECTED, REJECTED]
+    assert all(r.reason == "queue_full" for r in reqs[2:])
+    s = srv.stats()
+    assert s["shed"] == 2 and s["rejected"] == 2
+    # shed requests are already terminal; the queue drains the rest
+    done = srv.run()
+    assert {r.status for r in done if r in reqs[:2]} == {COMPLETED}
+
+
+def test_degradation_under_queue_pressure(c):
+    """Past the soft watermark, admissions trade per-neuron probes for
+    scalar ones (and shorter chunks) instead of being shed."""
+    srv = _server(c, max_queue=8, degrade_queue_depth=2,
+                  degraded_chunk_steps=10)
+    reqs = [_req(seed=s) for s in range(4)]
+    for r in reqs:
+        srv.submit(r)
+    assert [r.degraded for r in reqs] == [False, False, True, True]
+    assert reqs[2].probes == ProbeSpec(pop_rate=True)   # raster stripped
+    done = srv.run()
+    assert all(r.status == COMPLETED for r in done)
+    assert "raster" not in reqs[3].result.records
+    assert "pop_rate_hz" in reqs[3].result.records
+    assert srv.stats()["degraded"] == 2
+
+
+# --------------------------------------------------------------------------
+# (d) deadlines at chunk boundaries
+# --------------------------------------------------------------------------
+
+def test_deadline_expires_mid_chunk(c):
+    """A fake clock advancing per call: the request's budget runs out
+    while its batch is mid-flight, and the lane is cut at the next chunk
+    boundary while the batch-mate completes."""
+    t = [0.0]
+
+    def clock():
+        t[0] += 1.0
+        return t[0]
+
+    srv = _server(c, clock=clock, chunk_steps=20)
+    tight = _req(seed=0, deadline_s=2.0)     # expires during the run
+    loose = _req(seed=1)                     # no deadline
+    done = srv.run([tight, loose])
+    assert tight.status == REJECTED and tight.reason == "deadline"
+    assert tight.result is None
+    assert loose.status == COMPLETED
+    assert srv.stats()["deadline_expired"] == 1
+    assert len(done) == 2
+
+
+def test_deadline_sheds_before_dispatch(c):
+    """An already-expired queue entry is shed at tick time without
+    burning a batch slot."""
+    t = [0.0]
+
+    def clock():
+        t[0] += 100.0
+        return t[0]
+
+    srv = _server(c, clock=clock)
+    r = _req(seed=0, deadline_s=1.0)
+    srv.run([r])
+    assert r.status == REJECTED and r.reason == "deadline"
+    assert srv.stats()["batches"] == 0
+
+
+# --------------------------------------------------------------------------
+# (e) poison quarantine with per-lane attribution
+# --------------------------------------------------------------------------
+
+def test_poison_quarantined_after_two_failures_batchmates_survive(c):
+    """A NaN-stimulus request fails its lane's health check, is retried
+    solo (isolation), fails again, and is quarantined with the health
+    error attached — while a healthy request of the same scenario (its
+    own signature tier) completes with finite records."""
+    cfg = SimConfig(engine="csr", health=HealthConfig())
+    srv = _server(c, cfg=cfg, max_batch=4)
+    poison = _req(seed=0, scenario="step_response",
+                  params={"amp": float("nan")},
+                  probes=ProbeSpec(pop_rate=True))
+    healthy = _req(seed=1, scenario="step_response", params={"amp": 1.0},
+                   probes=ProbeSpec(pop_rate=True))
+    done = srv.run([poison, healthy])
+    assert poison.status == QUARANTINED
+    assert poison.reason == "nonfinite"
+    assert isinstance(poison.error, SimulationHealthError)
+    assert poison.error.kind == "nonfinite"
+    assert poison.health_failures == 2
+    assert poison.solo                      # never re-batched with healthy
+    assert healthy.status == COMPLETED
+    assert np.isfinite(
+        np.asarray(healthy.result.records["pop_rate_hz"])).all()
+    s = srv.stats()
+    assert s["quarantined"] == 1 and s["completed"] == 1
+    assert len(done) == 2
+
+
+# --------------------------------------------------------------------------
+# (f) crash retry with backoff, isolation, exhaustion
+# --------------------------------------------------------------------------
+
+def test_crash_retried_then_completes(c):
+    fired = []
+
+    def hook(start, stop):
+        if not fired:
+            fired.append(start)
+            raise ExchangeFault("injected host fault")
+
+    srv = _server(c)
+    r = _req(seed=0)
+    r.fault_hook = hook
+    srv.run([r])
+    assert r.status == COMPLETED and r.attempts == 1
+    assert srv.stats()["retries"] == 1
+    # the retried result is still the solo-run truth
+    stim = build_scenario("sugar_feeding", c, srv.cfg)
+    _assert_bitwise(simulate(c, srv.cfg, T, stimulus=stim, seed=0,
+                             probes=PROBES), r.result)
+
+
+def test_crash_loop_isolates_then_rejects(c):
+    """Persistent crasher: its hook-attributed crash isolates it (solo)
+    from the first failure on, so the healthy batch-mate requeues free —
+    no attempt charged — and completes; after ``max_retries`` the
+    crasher is rejected with the error attached."""
+    def hook(start, stop):
+        raise ExchangeFault("always broken")
+
+    srv = _server(c, max_retries=2)
+    crashy = _req(seed=0)
+    crashy.fault_hook = hook
+    buddy = _req(seed=1)
+    done = srv.run([crashy, buddy])
+    assert crashy.status == REJECTED and crashy.reason == "crash"
+    assert isinstance(crashy.error, ExchangeFault)
+    assert crashy.attempts == 3             # initial + 2 retries
+    assert crashy.solo
+    assert buddy.status == COMPLETED
+    assert buddy.attempts == 0              # attributed crash: no blame
+    assert not buddy.solo
+    assert len(done) == 2
+
+
+def test_backoff_delays_scheduled_on_retry(c):
+    """Retry gates honour BackoffPolicy: requeued requests carry a
+    ``not_before`` in the future and the drain loop waits them out."""
+    waits = []
+    t = [0.0]
+
+    def sleep(s):
+        waits.append(s)
+        t[0] += s
+
+    srv = SimServer(c, SimConfig(engine="csr"),
+                    SimServeConfig(chunk_steps=20,
+                                   backoff=BackoffPolicy(base_s=0.5,
+                                                         factor=2.0,
+                                                         jitter=0.0)),
+                    clock=lambda: t[0], sleep=sleep)
+    fired = []
+
+    def hook(start, stop):
+        if len(fired) < 2:
+            fired.append(start)
+            raise ExchangeFault("flaky")
+
+    r = _req(seed=0)
+    r.fault_hook = hook
+    srv.run([r])
+    assert r.status == COMPLETED and r.attempts == 2
+    # two waits, exponentially spaced: ~0.5s then ~1.0s
+    assert len(waits) == 2
+    assert waits[0] == pytest.approx(0.5, abs=0.2)
+    assert waits[1] == pytest.approx(1.0, abs=0.2)
+
+
+# --------------------------------------------------------------------------
+# (g) batch-tier capacity escalation
+# --------------------------------------------------------------------------
+
+def test_drop_rate_escalates_batch_tier_only(c):
+    """A drop-rate breach escalates capacity for THAT signature tier and
+    re-runs the batch; other tiers keep the base capacity."""
+    cfg = SimConfig(engine="event",
+                    capacity=CapacityConfig(spike_capacity=4,
+                                            syn_budget=16),
+                    health=HealthConfig(max_drop_rate=0.0))
+    srv = _server(c, cfg=cfg, max_batch=4, max_escalations=10)
+    hungry = [_req(seed=s) for s in (0, 1)]
+    done = srv.run(hungry)
+    assert all(r.status == COMPLETED for r in done)
+    s = srv.stats()
+    assert s["escalations"] >= 1
+    assert s["escalated_tiers"] == 1        # only the breached signature
+    sig = srv._signature(hungry[0])
+    assert srv._capacity[sig].syn_budget > 16
+    # converged lossless, and still the solo truth under ample capacity
+    ample = dataclasses.replace(srv.cfg, capacity=srv._capacity[sig])
+    stim = build_scenario("sugar_feeding", c, srv.cfg)
+    ref = simulate(c, ample, T, stimulus=stim, seed=0, probes=PROBES)
+    _assert_bitwise(ref, hungry[0].result)
+
+
+def test_capacity_exhaustion_rejects_batch(c):
+    cfg = SimConfig(engine="event",
+                    capacity=CapacityConfig(spike_capacity=1, syn_budget=2),
+                    health=HealthConfig(max_drop_rate=0.0))
+    srv = _server(c, cfg=cfg, max_escalations=1)
+    r = _req(seed=0)
+    srv.run([r])
+    assert r.status == REJECTED and r.reason == "capacity"
+    assert isinstance(r.error, SimulationHealthError)
+    assert r.error.kind == "drop_rate"
+
+
+# --------------------------------------------------------------------------
+# (h) events validate; every request terminal
+# --------------------------------------------------------------------------
+
+def test_events_schema_valid_and_all_terminal(c):
+    """The full mixed workload streams schema-valid serve_* events
+    (validate=True raises on drift) and every submitted request —
+    completed, shed, poisoned, crashed — ends terminal."""
+    events = []
+    fired = []
+
+    def hook(start, stop):
+        if not fired:
+            fired.append(start)
+            raise ExchangeFault("injected")
+
+    cfg = SimConfig(engine="csr", health=HealthConfig())
+    with obs.telemetry(events.append, validate=True):
+        srv = _server(c, cfg=cfg, max_queue=3, max_batch=2)
+        crashy = _req(seed=0)
+        crashy.fault_hook = hook
+        reqs = [crashy, _req(seed=1),
+                _req(seed=2, scenario="step_response",
+                     params={"amp": float("nan")},
+                     probes=ProbeSpec(pop_rate=True)),
+                _req(seed=3), _req(seed=4)]
+        done = srv.run(reqs)
+    assert len(done) == 5
+    statuses = {r.rid: r.status for r in done}
+    assert all(r.terminal for r in done)
+    assert statuses[reqs[2].rid] == QUARANTINED
+    assert sorted({e["type"] for e in events} & {
+        "serve_admit", "serve_batch", "serve_retry", "serve_quarantine",
+        "serve_shed", "serve_request_end"}) == [
+        "serve_admit", "serve_batch", "serve_quarantine",
+        "serve_request_end", "serve_retry", "serve_shed"]
+    ends = [e for e in events if e["type"] == "serve_request_end"]
+    assert len(ends) == 5                   # one terminal event per request
+    s = srv.stats()
+    assert (s["completed"] + s["rejected"] + s["quarantined"]
+            == s["submitted"] == 5)
+
+
+def test_stats_latency_percentiles(c):
+    srv = _server(c)
+    srv.run([_req(seed=s) for s in range(3)])
+    s = srv.stats()
+    assert s["latency_p50_s"] is not None
+    assert s["latency_p99_s"] >= s["latency_p50_s"] >= 0.0
+    assert s["queue_depth"] == 0
